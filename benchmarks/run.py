@@ -1,0 +1,92 @@
+"""Benchmark harness — one section per paper table/figure.
+
+  * Table IV (the scopes): every completed scope runs through the core
+    runner; each benchmark instance prints ``name,us_per_call,derived``
+    where ``derived`` is the scope's natural rate (GB/s, Mitems/s, modeled
+    seconds, ...);
+  * Figure 3 (ScopePlot line plot): regenerates the example saxpy plot
+    from live results via the scopeplot spec pipeline;
+  * §Roofline feed: the model scope surfaces the dry-run cells when
+    results/dryrun exists.
+
+Wall-clock numbers are CPU wall-clock on this container (framework
+overhead + relative comparisons); TPU numbers are the modeled columns.
+"""
+import os
+
+SCOPES = ["example", "mxu", "comm", "nn", "instr", "histo", "linalg", "io",
+          "model"]
+
+
+def _derived(rec) -> str:
+    for key, scale, unit in (("bytes_per_second", 1e-9, "GB/s"),
+                             ("items_per_second", 1e-6, "Mitems/s"),
+                             ("modeled_s", 1e6, "modeled_us"),
+                             ("cells", 1, "cells")):
+        v = rec.raw.get(key)
+        if v:
+            return f"{v * scale:.3f}{unit}"
+    return ""
+
+
+def run_scope(scope: str, min_time: float = 0.02):
+    from repro.core import REGISTRY, RunOptions, run_benchmarks
+    from repro.core.scope import ScopeManager
+    from repro.scopeplot import BenchmarkFile
+
+    REGISTRY.reset()
+    mgr = ScopeManager()
+    mgr.load([f"repro.scopes.{scope}_scope"])
+    mgr.register_all()
+    benches = REGISTRY.filter(".*", scopes=[scope])
+    doc = run_benchmarks(benches, RunOptions(min_time=min_time),
+                         progress=False)
+    bf = BenchmarkFile.from_dict(doc)
+    for rec in bf.without_errors():
+        if rec.raw.get("run_type") == "aggregate":
+            continue
+        us = rec.real_time_seconds()
+        us = us * 1e6 if us is not None else float("nan")
+        print(f"{rec.name},{us:.2f},{_derived(rec)}")
+    return doc
+
+
+def figure3_plot(docs) -> None:
+    """Regenerate the paper's Fig. 3-style line plot via scopeplot."""
+    import json
+    import tempfile
+    from repro.scopeplot.plot import render_spec
+    ex = docs.get("example")
+    if ex is None:
+        return
+    with tempfile.TemporaryDirectory() as d:
+        src = os.path.join(d, "example.json")
+        with open(src, "w") as f:
+            json.dump(ex, f)
+        spec = {
+            "title": "saxpy throughput (Fig. 3 analogue)",
+            "type": "line",
+            "output": os.path.join("results", "fig3_saxpy.png"),
+            "x_axis": {"label": "elements", "scale": "log"},
+            "y_axis": {"label": "GB/s"},
+            "series": [{"label": "saxpy", "input_file": src,
+                        "regex": "example/saxpy", "xfield": "n",
+                        "yfield": "bytes_per_second", "yscale": 1e-9}],
+        }
+        os.makedirs("results", exist_ok=True)
+        out = render_spec(spec)
+        print(f"fig3_plot,0.00,{out}")
+
+
+def main() -> None:
+    docs = {}
+    for scope in SCOPES:
+        try:
+            docs[scope] = run_scope(scope)
+        except Exception as e:  # noqa: BLE001 - isolate scope failures
+            print(f"{scope}/SCOPE_FAILED,0.00,{type(e).__name__}:{e}")
+    figure3_plot(docs)
+
+
+if __name__ == '__main__':
+    main()

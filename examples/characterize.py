@@ -1,0 +1,41 @@
+"""Characterization scenario: run three scopes, merge with scope_plot cat,
+filter, and produce a comparison bar chart — the paper's Fig. 1 data flow
+(SCOPE binary -> JSON -> ScopePlot) as a script.
+
+Run:  PYTHONPATH=src python examples/characterize.py
+"""
+import json
+import os
+
+from repro.core import REGISTRY, RunOptions, run_benchmarks
+from repro.core.scope import ScopeManager
+from repro.scopeplot import BenchmarkFile, cat
+from repro.scopeplot.plot import quick_bar
+
+
+def run_scope(name):
+    REGISTRY.reset()
+    mgr = ScopeManager()
+    mgr.load([f"repro.scopes.{name}_scope"])
+    mgr.register_all()
+    doc = run_benchmarks(REGISTRY.filter(".*"), RunOptions(min_time=0.02),
+                         progress=False)
+    return BenchmarkFile.from_dict(doc)
+
+
+def main():
+    os.makedirs("results", exist_ok=True)
+    merged = cat([run_scope(n) for n in ("instr", "histo", "linalg")])
+    merged.save("results/characterize.json")
+    print(f"{len(merged)} records from 3 scopes -> results/characterize.json")
+    fast = merged.without_errors().filter_name("instr/")
+    frame = fast.to_frame(["name", "real_time"])
+    print(frame.sort_by("real_time").to_csv())
+    out = quick_bar("results/characterize.json", "name", "real_time",
+                    title="instr scope op latencies",
+                    output="results/characterize.png", regex="instr/")
+    print("wrote", out)
+
+
+if __name__ == "__main__":
+    main()

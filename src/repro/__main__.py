@@ -1,0 +1,7 @@
+"""``python -m repro`` — the SCOPE binary."""
+import sys
+
+from repro.core.main import main
+
+if __name__ == "__main__":
+    sys.exit(main())

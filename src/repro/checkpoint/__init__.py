@@ -1,0 +1,6 @@
+"""repro.checkpoint — sharded, async, fault-tolerant checkpoints."""
+from .manager import CheckpointManager
+from .store import load_checkpoint, restore_resharded, save_checkpoint
+
+__all__ = ["CheckpointManager", "load_checkpoint", "restore_resharded",
+           "save_checkpoint"]

@@ -1,0 +1,40 @@
+"""repro.core — the SCOPE repository analogue (paper §III).
+
+The paper's primary contribution: a thin benchmark-free core providing
+registration, configuration, uniform utilities, init hooks, and uniform
+JSON reporting for independently-developed benchmark groups ("scopes").
+
+Public API surface for scope authors::
+
+    from repro.core import benchmark, State, Scope, FLAGS
+
+    def _register(registry):
+        @benchmark(scope="myscope", registry=registry)
+        def my_bench(state: State):
+            while state.keep_running():
+                ...
+
+    SCOPE = Scope(name="myscope", register=_register)
+"""
+from .benchmark import Benchmark, State, SkipError
+from .errorcheck import (ScopeError, check_compiles, check_finite,
+                         check_shape, check_sharding, checked, sync)
+from .flags import FLAGS, FlagRegistry
+from .hooks import HOOKS, HookChain
+from .logging import get_logger
+from .registry import (REGISTRY, BenchmarkRegistry, benchmark,
+                       register_benchmark)
+from .runner import RunOptions, run_benchmarks, write_json
+from .scope import BUILTIN_SCOPES, Scope, ScopeManager
+from .sysinfo import TPU_V5E, build_context
+
+__all__ = [
+    "Benchmark", "State", "SkipError",
+    "ScopeError", "check_compiles", "check_finite", "check_shape",
+    "check_sharding", "checked", "sync",
+    "FLAGS", "FlagRegistry", "HOOKS", "HookChain", "get_logger",
+    "REGISTRY", "BenchmarkRegistry", "benchmark", "register_benchmark",
+    "RunOptions", "run_benchmarks", "write_json",
+    "BUILTIN_SCOPES", "Scope", "ScopeManager",
+    "TPU_V5E", "build_context",
+]

@@ -1,0 +1,218 @@
+"""Benchmark & State — the Google Benchmark library analogue (paper §III-E).
+
+SCOPE provides "the entire Google Benchmark library ... to configure and
+register the benchmark code".  This module reimplements the parts of that
+library's semantics that SCOPE's benchmarks rely on, in Python:
+
+  * ``State`` — the iteration object handed to a benchmark body.  Supports
+    the ``while state.keep_running():`` / ``for _ in state:`` protocols,
+    manual timing pause/resume, counters, bytes/items-processed rates, and
+    ``skip_with_error``.
+  * ``Benchmark`` — a registered benchmark family: a body plus an argument
+    sweep (``args`` / ``ranges``, mirroring GB's ``->Args()``/``->Ranges()``),
+    a time unit, and optional per-benchmark min-time/repetitions overrides.
+
+The runner (runner.py) drives State with adaptive iteration counts exactly
+like Google Benchmark: batches grow geometrically until the measured time
+exceeds ``min_time``.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+TIME_UNITS = {"ns": 1e9, "us": 1e6, "ms": 1e3, "s": 1.0}
+
+
+class SkipError(Exception):
+    """Raised internally when a benchmark calls skip_with_error."""
+
+
+class State:
+    """Iteration state for one benchmark run (one point in the arg sweep)."""
+
+    def __init__(self, ranges: Sequence[int] = (), max_iterations: int = 1):
+        self._ranges: Tuple[int, ...] = tuple(ranges)
+        self.max_iterations = max_iterations
+        self.iterations = 0
+        self.counters: Dict[str, float] = {}
+        self.bytes_processed = 0
+        self.items_processed = 0
+        self.label = ""
+        self.error_occurred = False
+        self.error_message = ""
+        self.skipped = False
+        self.skip_message = ""
+        # manual timing
+        self._timing = False
+        self._t_start = 0.0
+        self._elapsed = 0.0
+        self._paused_elapsed = 0.0
+
+    # -- GB arg access ------------------------------------------------
+    def range(self, i: int = 0) -> int:
+        return self._ranges[i]
+
+    @property
+    def ranges(self) -> Tuple[int, ...]:
+        return self._ranges
+
+    # -- iteration protocol --------------------------------------------
+    def keep_running(self) -> bool:
+        if self.error_occurred or self.skipped:
+            return False
+        if self.iterations == 0:
+            self._start_timer()
+        if self.iterations >= self.max_iterations:
+            self._stop_timer()
+            return False
+        self.iterations += 1
+        return True
+
+    def __iter__(self):
+        while self.keep_running():
+            yield self.iterations
+
+    # -- timing ----------------------------------------------------------
+    def _start_timer(self) -> None:
+        self._timing = True
+        self._t_start = time.perf_counter()
+
+    def _stop_timer(self) -> None:
+        if self._timing:
+            self._elapsed += time.perf_counter() - self._t_start
+            self._timing = False
+
+    def pause_timing(self) -> None:
+        """GB PauseTiming(): exclude a section from the measured time."""
+        self._stop_timer()
+
+    def resume_timing(self) -> None:
+        self._start_timer()
+
+    def set_iteration_time(self, seconds: float) -> None:
+        """GB SetIterationTime() for manual-time benchmarks."""
+        self._paused_elapsed += seconds
+
+    @property
+    def elapsed(self) -> float:
+        return self._elapsed
+
+    @property
+    def manual_elapsed(self) -> float:
+        return self._paused_elapsed
+
+    # -- results ----------------------------------------------------------
+    def set_bytes_processed(self, n: int) -> None:
+        self.bytes_processed = n
+
+    def set_items_processed(self, n: int) -> None:
+        self.items_processed = n
+
+    def set_label(self, label: str) -> None:
+        self.label = label
+
+    def skip_with_error(self, msg: str) -> None:
+        self.error_occurred = True
+        self.error_message = msg
+
+    def skip_with_message(self, msg: str) -> None:
+        self.skipped = True
+        self.skip_message = msg
+
+
+BenchmarkFn = Callable[[State], None]
+
+
+@dataclass
+class Benchmark:
+    """A registered benchmark family (body + argument sweep + metadata)."""
+
+    name: str
+    fn: BenchmarkFn
+    scope: str = "core"
+    arg_sets: List[Tuple[int, ...]] = field(default_factory=list)
+    arg_names: List[str] = field(default_factory=list)
+    unit: str = "us"
+    min_time: Optional[float] = None       # per-benchmark override
+    repetitions: Optional[int] = None
+    iterations: Optional[int] = None       # fixed iteration count (no adaptation)
+    use_manual_time: bool = False
+    labels: Dict[str, str] = field(default_factory=dict)
+    doc: str = ""
+
+    # -- GB-style fluent sweep builders -----------------------------------
+    def args(self, values: Sequence[int]) -> "Benchmark":
+        self.arg_sets.append(tuple(values))
+        return self
+
+    def args_product(self, lists: Sequence[Sequence[int]]) -> "Benchmark":
+        """GB ArgsProduct: cartesian product of per-position value lists."""
+        for combo in itertools.product(*lists):
+            self.arg_sets.append(tuple(combo))
+        return self
+
+    def range_multiplier_args(self, lo: int, hi: int, mult: int = 2
+                              ) -> "Benchmark":
+        """GB Range(lo, hi): geometric sweep of a single argument."""
+        v = lo
+        while v <= hi:
+            self.arg_sets.append((v,))
+            v *= mult
+        return self
+
+    def ranges(self, pairs: Sequence[Tuple[int, int]], mult: int = 2
+               ) -> "Benchmark":
+        """GB Ranges: cartesian product of geometric sweeps."""
+        axes: List[List[int]] = []
+        for lo, hi in pairs:
+            ax, v = [], lo
+            while v <= hi:
+                ax.append(v)
+                v *= mult
+            axes.append(ax)
+        for combo in itertools.product(*axes):
+            self.arg_sets.append(tuple(combo))
+        return self
+
+    def set_arg_names(self, names: Sequence[str]) -> "Benchmark":
+        self.arg_names = list(names)
+        return self
+
+    def set_unit(self, unit: str) -> "Benchmark":
+        assert unit in TIME_UNITS, unit
+        self.unit = unit
+        return self
+
+    def set_min_time(self, seconds: float) -> "Benchmark":
+        self.min_time = seconds
+        return self
+
+    def set_iterations(self, n: int) -> "Benchmark":
+        self.iterations = n
+        return self
+
+    def manual_time(self) -> "Benchmark":
+        self.use_manual_time = True
+        return self
+
+    def set_label(self, key: str, value: str) -> "Benchmark":
+        self.labels[key] = value
+        return self
+
+    # -- naming -------------------------------------------------------
+    def instance_name(self, arg_set: Tuple[int, ...]) -> str:
+        """GB-style display name: ``family/arg0/arg1`` or named args."""
+        if not arg_set:
+            return self.name
+        if self.arg_names and len(self.arg_names) == len(arg_set):
+            parts = [f"{n}:{v}" for n, v in zip(self.arg_names, arg_set)]
+        else:
+            parts = [str(v) for v in arg_set]
+        return self.name + "/" + "/".join(parts)
+
+    def instances(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        sets = self.arg_sets or [()]
+        return [(self.instance_name(s), s) for s in sets]

@@ -1,0 +1,80 @@
+"""Error-checking utilities — the CUDA-error-check analogue (paper §III-E).
+
+The paper ships ``CUDA_CHECK``-style helpers because "most extant benchmarks
+are CUDA benchmarks".  Our benchmarks are JAX programs; the failure modes
+worth guarding uniformly are numerical (NaN/Inf escaping a step), sharding
+(outputs losing their intended layout), and compilation (lowering errors that
+should fail a benchmark rather than crash the binary).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ScopeError(RuntimeError):
+    """Uniform error type raised by the check helpers."""
+
+
+def check_finite(tree: Any, where: str = "") -> Any:
+    """Raise ScopeError if any leaf of ``tree`` contains NaN/Inf.
+
+    Call on *concrete* values (post-``block_until_ready``), not traced ones.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "f" and not np.all(np.isfinite(arr)):
+            raise ScopeError(
+                f"non-finite value in leaf {i}" + (f" at {where}" if where else "")
+            )
+    return tree
+
+
+def check_shape(x: Any, expected: tuple, where: str = "") -> Any:
+    if tuple(x.shape) != tuple(expected):
+        raise ScopeError(
+            f"shape mismatch{' at ' + where if where else ''}: "
+            f"got {tuple(x.shape)}, want {tuple(expected)}"
+        )
+    return x
+
+
+def check_sharding(x: jax.Array, spec, where: str = "") -> jax.Array:
+    """Assert a concrete array's sharding matches a PartitionSpec."""
+    got = getattr(x.sharding, "spec", None)
+    if got is not None and tuple(got) != tuple(spec):
+        raise ScopeError(
+            f"sharding mismatch{' at ' + where if where else ''}: "
+            f"got {got}, want {spec}"
+        )
+    return x
+
+
+def check_compiles(fn: Callable, *args, **kwargs):
+    """Lower+compile ``fn`` AOT; convert XLA errors into ScopeError."""
+    try:
+        return jax.jit(fn).lower(*args, **kwargs).compile()
+    except Exception as e:
+        raise ScopeError(f"compilation failed: {e}") from e
+
+
+def checked(fn: Callable) -> Callable:
+    """Decorator: block on outputs and run check_finite on them."""
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        out = fn(*args, **kwargs)
+        out = jax.block_until_ready(out)
+        return check_finite(out, where=fn.__name__)
+
+    return wrapper
+
+
+def sync(x: Any) -> Any:
+    """Device synchronization — the ``cudaDeviceSynchronize`` of this stack."""
+    return jax.block_until_ready(x)

@@ -1,0 +1,91 @@
+"""The SCOPE binary entry point (paper Fig. 1, ``python -m repro``).
+
+Startup sequence mirrors the paper's run stage:
+
+  1. load scopes (download/configure analogue — imports, flag declaration)
+  2. run pre-parse init hooks
+  3. parse CLI (core flags + every scope's declared flags)
+  4. run post-parse init hooks
+  5. enable/disable scopes, register their benchmarks
+  6. filter, run, write the Google-Benchmark JSON data file
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from . import logging as scope_logging
+from .flags import FLAGS
+from .hooks import HOOKS
+from .registry import REGISTRY
+from .runner import RunOptions, run_benchmarks, write_json
+from .scope import ScopeManager
+
+log = scope_logging.get_logger("main")
+
+
+def main(argv: Optional[List[str]] = None,
+         scope_modules: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+
+    # Scope selection is core-level (not a scope flag), parse separately.
+    sel = argparse.ArgumentParser(add_help=False)
+    sel.add_argument("--enable-scope", action="append", default=None,
+                     help="enable ONLY these scopes (repeatable)")
+    sel.add_argument("--disable-scope", action="append", default=[],
+                     help="disable these scopes (repeatable)")
+    sel.add_argument("--list-scopes", action="store_true")
+    sel_ns, rest = sel.parse_known_args(argv)
+
+    mgr = ScopeManager()
+    mgr.load(scope_modules)
+
+    rc = HOOKS.run_pre_parse()
+    if rc is not None:
+        return rc
+
+    FLAGS.parse(rest)
+    scope_logging.set_level(FLAGS.get("log_level", "INFO"))
+
+    rc = HOOKS.run_post_parse()
+    if rc is not None:
+        return rc
+
+    mgr.configure(enable=sel_ns.enable_scope, disable=sel_ns.disable_scope)
+    if sel_ns.list_scopes:
+        for name, status in sorted(mgr.status().items()):
+            print(f"{name:24s} {status}")
+        return 0
+
+    mgr.register_all()
+
+    pattern = FLAGS.get("benchmark_filter", ".*")
+    benches = REGISTRY.filter(pattern)
+    if FLAGS.get("benchmark_list_tests"):
+        for b in benches:
+            for name, _ in b.instances():
+                print(name)
+        return 0
+    if not benches:
+        log.error("no benchmarks match %r", pattern)
+        return 1
+
+    opts = RunOptions(
+        min_time=FLAGS.get("benchmark_min_time", 0.05),
+        repetitions=FLAGS.get("benchmark_repetitions", 1),
+    )
+    doc = run_benchmarks(benches, opts,
+                         context_extra={"scopes": mgr.status()})
+    out = FLAGS.get("benchmark_out")
+    if out:
+        write_json(doc, out)
+        log.info("wrote %s (%d records)", out, len(doc["benchmarks"]))
+    else:
+        write_json(doc, sys.stdout)
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,222 @@
+"""Benchmark runner + Google-Benchmark-compatible JSON writer.
+
+Reimplements the run stage of the SCOPE binary (paper Fig. 2(d)):
+
+  * adaptive iteration counts — a batch of iterations grows geometrically
+    until measured wall time exceeds ``min_time`` (Google Benchmark's
+    algorithm), so fast benchmarks are timed over many iterations and slow
+    ones over few;
+  * repetitions with mean/median/stddev aggregate records;
+  * results serialized in the Google Benchmark JSON schema (``context`` +
+    ``benchmarks[]``), unmodified counters inlined per record — the property
+    that makes ScopePlot "compatible with other tools that use that library".
+"""
+from __future__ import annotations
+
+import json
+import math
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, TextIO, Tuple
+
+from .benchmark import Benchmark, State, TIME_UNITS
+from .logging import get_logger
+from .sysinfo import build_context
+
+log = get_logger("runner")
+
+
+@dataclass
+class RunOptions:
+    min_time: float = 0.05          # seconds of measured time per instance
+    repetitions: int = 1
+    max_iterations: int = 1 << 22   # safety valve
+    report_aggregates_only: bool = False
+
+
+@dataclass
+class RunRecord:
+    """One row of the ``benchmarks`` array in the output JSON."""
+    name: str
+    run_name: str
+    run_type: str                  # "iteration" | "aggregate"
+    iterations: int
+    real_time: float               # in time_unit
+    cpu_time: float
+    time_unit: str
+    repetitions: int = 1
+    repetition_index: int = 0
+    threads: int = 1
+    aggregate_name: Optional[str] = None
+    bytes_per_second: Optional[float] = None
+    items_per_second: Optional[float] = None
+    label: Optional[str] = None
+    error_occurred: bool = False
+    error_message: Optional[str] = None
+    skipped: bool = False
+    skip_message: Optional[str] = None
+    counters: Dict[str, float] = field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "name": self.name,
+            "run_name": self.run_name,
+            "run_type": self.run_type,
+            "repetitions": self.repetitions,
+            "repetition_index": self.repetition_index,
+            "threads": self.threads,
+            "iterations": self.iterations,
+            "real_time": self.real_time,
+            "cpu_time": self.cpu_time,
+            "time_unit": self.time_unit,
+        }
+        if self.aggregate_name:
+            d["aggregate_name"] = self.aggregate_name
+        if self.bytes_per_second is not None:
+            d["bytes_per_second"] = self.bytes_per_second
+        if self.items_per_second is not None:
+            d["items_per_second"] = self.items_per_second
+        if self.label:
+            d["label"] = self.label
+        if self.error_occurred:
+            d["error_occurred"] = True
+            d["error_message"] = self.error_message
+        if self.skipped:
+            d["skipped"] = True
+            d["skip_message"] = self.skip_message
+        d.update(self.counters)       # GB inlines counters at top level
+        return d
+
+
+def _run_batch(bench: Benchmark, arg_set: Tuple[int, ...], n: int) -> State:
+    state = State(ranges=arg_set, max_iterations=n)
+    bench.fn(state)
+    return state
+
+
+def _time_of(state: State, bench: Benchmark) -> float:
+    return state.manual_elapsed if bench.use_manual_time else state.elapsed
+
+
+def run_instance(bench: Benchmark, arg_set: Tuple[int, ...],
+                 opts: RunOptions) -> List[RunRecord]:
+    """Run one (family × arg-set) instance: calibrate, repeat, aggregate."""
+    name = bench.instance_name(arg_set)
+    min_time = bench.min_time if bench.min_time is not None else opts.min_time
+    reps = bench.repetitions if bench.repetitions is not None else opts.repetitions
+    unit_scale = TIME_UNITS[bench.unit]
+
+    # -- calibration: grow n until elapsed >= min_time -----------------
+    if bench.iterations is not None:
+        n = bench.iterations
+        warm = _run_batch(bench, arg_set, n)
+        if warm.error_occurred or warm.skipped:
+            return [_error_record(bench, name, warm, reps)]
+    else:
+        n = 1
+        while True:
+            warm = _run_batch(bench, arg_set, n)
+            if warm.error_occurred or warm.skipped:
+                return [_error_record(bench, name, warm, reps)]
+            t = _time_of(warm, bench)
+            if t >= min_time or n >= opts.max_iterations:
+                break
+            if t <= 0:
+                n = min(n * 10, opts.max_iterations)
+            else:
+                # GB's multiplier: overshoot slightly to converge fast
+                mult = min(10.0, max(2.0, 1.4 * min_time / t))
+                n = min(int(math.ceil(n * mult)), opts.max_iterations)
+
+    # -- timed repetitions ------------------------------------------------
+    records: List[RunRecord] = []
+    per_iter_times: List[float] = []
+    for rep in range(reps):
+        st = _run_batch(bench, arg_set, n)
+        if st.error_occurred or st.skipped:
+            records.append(_error_record(bench, name, st, reps, rep))
+            continue
+        total = _time_of(st, bench)
+        per_iter = total / max(st.iterations, 1)
+        per_iter_times.append(per_iter)
+        rec = RunRecord(
+            name=name, run_name=name, run_type="iteration",
+            iterations=st.iterations,
+            real_time=per_iter * unit_scale,
+            cpu_time=per_iter * unit_scale,
+            time_unit=bench.unit,
+            repetitions=reps, repetition_index=rep,
+            label=st.label or None,
+            counters=dict(st.counters),
+        )
+        if st.bytes_processed:
+            rec.bytes_per_second = st.bytes_processed * st.iterations / total
+        if st.items_processed:
+            rec.items_per_second = st.items_processed * st.iterations / total
+        records.append(rec)
+
+    # -- aggregates ---------------------------------------------------
+    if reps > 1 and len(per_iter_times) > 1:
+        aggs = {
+            "mean": statistics.fmean(per_iter_times),
+            "median": statistics.median(per_iter_times),
+            "stddev": statistics.stdev(per_iter_times),
+        }
+        for agg_name, val in aggs.items():
+            records.append(RunRecord(
+                name=f"{name}_{agg_name}", run_name=name,
+                run_type="aggregate", aggregate_name=agg_name,
+                iterations=n,
+                real_time=val * unit_scale, cpu_time=val * unit_scale,
+                time_unit=bench.unit, repetitions=reps,
+            ))
+        if opts.report_aggregates_only:
+            records = [r for r in records if r.run_type == "aggregate"]
+    return records
+
+
+def _error_record(bench: Benchmark, name: str, st: State, reps: int,
+                  rep: int = 0) -> RunRecord:
+    return RunRecord(
+        name=name, run_name=name, run_type="iteration",
+        iterations=st.iterations, real_time=0.0, cpu_time=0.0,
+        time_unit=bench.unit, repetitions=reps, repetition_index=rep,
+        error_occurred=st.error_occurred, error_message=st.error_message or None,
+        skipped=st.skipped, skip_message=st.skip_message or None,
+    )
+
+
+def run_benchmarks(benches: Sequence[Benchmark],
+                   opts: Optional[RunOptions] = None,
+                   context_extra: Optional[Dict[str, Any]] = None,
+                   progress: bool = True) -> Dict[str, Any]:
+    """Run benchmark families; return the full GB-JSON document as a dict."""
+    opts = opts or RunOptions()
+    all_records: List[RunRecord] = []
+    t0 = time.perf_counter()
+    for bench in benches:
+        for name, arg_set in bench.instances():
+            if progress:
+                log.info("running %s", name)
+            try:
+                all_records.extend(run_instance(bench, arg_set, opts))
+            except Exception as e:  # noqa: BLE001 - isolate benchmark crashes
+                log.error("benchmark %s crashed: %s", name, e)
+                st = State()
+                st.skip_with_error(f"crashed: {e}")
+                all_records.append(_error_record(bench, name, st, 1))
+    elapsed = time.perf_counter() - t0
+    log.info("ran %d records in %.2fs", len(all_records), elapsed)
+    return {
+        "context": build_context(context_extra),
+        "benchmarks": [r.to_json() for r in all_records],
+    }
+
+
+def write_json(doc: Dict[str, Any], path_or_file) -> None:
+    if hasattr(path_or_file, "write"):
+        json.dump(doc, path_or_file, indent=2)
+    else:
+        with open(path_or_file, "w") as f:
+            json.dump(doc, f, indent=2)

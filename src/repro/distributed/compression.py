@@ -1,0 +1,97 @@
+"""Gradient compression with error feedback — cross-pod DCN relief.
+
+At 512+ chips the 'pod' axis all-reduce crosses DCN (~25 GB/s/host vs
+~200 GB/s aggregate ICI), so compressing the cross-pod gradient traffic is
+one of the standard large-scale tricks.  Two codecs:
+
+  * bf16: cast-before-reduce (2x), error-free in practice for gradients
+    feeding an fp32 optimizer;
+  * int8: per-block affine quantization (4x vs fp32) with **error
+    feedback** — the quantization residual is carried into the next step's
+    gradient, so the *accumulated* update is unbiased (Seide et al. / EF14
+    style; contraction property tested with hypothesis in
+    tests/test_compression.py).
+
+Codecs are pure functions on pytrees so they compose with pjit: compress →
+psum → decompress inside the step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def bf16_compress(tree):
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.bfloat16) if g.dtype == jnp.float32 else g,
+        tree)
+
+
+def bf16_decompress(tree):
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) if g.dtype == jnp.bfloat16 else g,
+        tree)
+
+
+def _pad_to_block(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def int8_quantize(x: jax.Array) -> Dict[str, jax.Array]:
+    """Per-block symmetric int8: q = round(x / s), s = max|x| / 127."""
+    blocks, pad = _pad_to_block(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32),
+            "pad": jnp.asarray(pad, jnp.int32)}
+
+
+def int8_dequantize(packed: Dict[str, jax.Array], shape, dtype=jnp.float32
+                    ) -> jax.Array:
+    flat = (packed["q"].astype(jnp.float32) * packed["scale"]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def ef_compress_tree(grads, error_state: Optional[Any] = None):
+    """Error-feedback int8 compression over a gradient pytree.
+
+    Returns (packed_tree, new_error_state).  The caller psums ``q``
+    (int8 sums fit int32 — we keep int8 end-to-end by averaging AFTER
+    dequantize, which psum of q/scale pairs approximates; here we expose
+    the codec and the trainer chooses where the reduce happens).
+    """
+    if error_state is None:
+        error_state = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def comp(g, e):
+        corrected = g.astype(jnp.float32) + e
+        packed = int8_quantize(corrected)
+        decoded = int8_dequantize(packed, g.shape)
+        new_e = corrected - decoded        # residual carried forward
+        return packed, new_e
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error_state)
+    packed, errs = zip(*[comp(g, e) for g, e in zip(flat_g, flat_e)])
+    return (jax.tree_util.tree_unflatten(treedef, list(packed)),
+            jax.tree_util.tree_unflatten(treedef, list(errs)))
+
+
+def ef_decompress_tree(packed_tree, shapes_tree):
+    return jax.tree_util.tree_map(
+        lambda p, s: int8_dequantize(p, s.shape),
+        packed_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, dict) and "q" in x)

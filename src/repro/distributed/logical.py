@@ -1,0 +1,78 @@
+"""Logical-axis sharding constraints (MaxText-style) for layer internals.
+
+Model code annotates activations with *logical* axes ("batch", "heads",
+"ff", ...); the launch layer binds logical→mesh rules for the (config,
+mesh) pair before tracing.  With no rules bound (unit tests, single-CPU
+smoke runs) every constraint is a no-op, so model code stays mesh-agnostic.
+
+This resolves SPMD propagation ambiguities explicitly — e.g. GQA reshapes
+where XLA cannot know whether 'model' should land on the kv-head or the
+q-group dim — instead of hoping the partitioner guesses well.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, Axis]]:
+    return getattr(_state, "rules", None)
+
+
+def default_rules(cfg, mesh) -> Dict[str, Axis]:
+    """Bind logical axes to mesh axes with divisibility guards."""
+    m = mesh.shape.get("model", 1)
+    batch = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    heads_ok = cfg.num_heads % m == 0
+    kv_ok = cfg.num_kv_heads % m == 0
+    return {
+        "mesh": mesh,                  # consumed by shard_map layers
+        "batch": batch,
+        "seq": None,
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "head_dim": None,
+        "ff": "model" if (cfg.d_ff == 0 or cfg.d_ff % m == 0) else None,
+        "moe_ff": "model" if (cfg.moe_d_ff or cfg.d_ff) % max(m, 1) == 0 else None,
+        "experts": "model" if (cfg.moe_num_experts % m == 0
+                               if cfg.moe_num_experts else False) else None,
+        "inner": "model" if (cfg.ssm_d_inner % m == 0
+                             if cfg.ssm_state else False) else None,
+        "ssm_heads": "model" if (cfg.ssm_heads % m == 0
+                                 if cfg.ssm_state else False) else None,
+        "embed": None,       # d_model of activations stays unsharded
+        "vocab": "model" if cfg.vocab_size % m == 0 else None,
+    }
+
+
+@contextlib.contextmanager
+def logical_rules(rules: Dict[str, Axis]):
+    prev = _rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply with_sharding_constraint per bound rules (no-op when unbound)."""
+    rules = _rules()
+    if rules is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = P(*[rules.get(a) if a else None for a in axes])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def active_rules() -> Optional[Dict[str, Axis]]:
+    """The currently-bound rules (None outside a logical_rules context)."""
+    return _rules()

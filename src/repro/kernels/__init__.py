@@ -1,0 +1,14 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot-spots.
+
+Each kernel is a subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (jit'd public wrapper with the interpret/TPU switch),
+``ref.py`` (pure-jnp oracle).  Kernels are validated on CPU via
+``interpret=True`` (the kernel body executes in Python) and tiled for the
+TPU v5e memory hierarchy: blocks sized to fit VMEM (~128 MiB/core) with
+MXU-aligned (128x128) matmul dims.
+
+SCOPE mapping: the paper's TCU|Scope measures Nvidia tensor cores; our
+matmul kernel is the MXU analogue (mxu_scope's measured body).  Histo|Scope
+maps to the histogram kernel.  cuDNN|Scope's NN-op bodies map to
+flash_attention / rmsnorm / ssd_scan.
+"""

@@ -1,0 +1,14 @@
+"""Public jit'd wrapper for the flash-attention kernel."""
+import functools
+
+import jax
+
+from .kernel import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bk: int = 512):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, bq=bq, bk=bk,
+        interpret=jax.default_backend() != "tpu")

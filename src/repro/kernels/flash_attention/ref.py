@@ -1,0 +1,4 @@
+"""Pure-jnp oracle: repro.models.layers.naive_attention re-export."""
+from repro.models.layers import naive_attention as flash_attention_ref
+
+__all__ = ["flash_attention_ref"]

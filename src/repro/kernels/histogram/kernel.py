@@ -1,0 +1,42 @@
+"""Histogram Pallas kernel — the Histo|Scope body, TPU-adapted.
+
+The CUDA histogram problem is shared-memory atomics; the TPU has no
+atomics, but the sequential grid makes privatization trivial: every grid
+step accumulates its chunk's counts into the same VMEM-resident output
+block (revisited across steps), via a one-hot matmul that feeds the MXU —
+the TPU-native replacement for scatter-increment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(x_ref, o_ref, *, nbins: int, chunk: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    v = x_ref[...]                                     # [chunk] int32
+    onehot = (v[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (chunk, nbins), 1))
+    o_ref[...] += jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+
+def histogram_pallas(x: jax.Array, nbins: int, *, chunk: int = 4096,
+                     interpret: bool = False) -> jax.Array:
+    """x: int32 values in [0, nbins) (1-D); returns int32 [nbins]."""
+    n = x.shape[0]
+    chunk_ = min(chunk, n)
+    assert n % chunk_ == 0, (n, chunk_)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, nbins=nbins, chunk=chunk_),
+        grid=(n // chunk_,),
+        in_specs=[pl.BlockSpec((chunk_,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((nbins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nbins,), jnp.int32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,11 @@
+import functools
+
+import jax
+
+from .kernel import histogram_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "chunk"))
+def histogram(x, nbins: int, *, chunk: int = 4096):
+    return histogram_pallas(x, nbins, chunk=chunk,
+                            interpret=jax.default_backend() != "tpu")

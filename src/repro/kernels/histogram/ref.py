@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for histogram."""
+import jax.numpy as jnp
+
+
+def histogram_ref(x, nbins: int):
+    return jnp.bincount(x, length=nbins).astype(jnp.int32)

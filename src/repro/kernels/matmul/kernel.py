@@ -1,0 +1,65 @@
+"""MXU-tiled matmul — the TCU|Scope analogue body.
+
+Grid (M/bm, N/bn, K/bk); K is the innermost (sequential) grid dim so the
+fp32 VMEM accumulator carries across K steps and spills to HBM exactly once
+per (i, j) tile.  Block sizes default to MXU-aligned 512×512×512 (bf16
+working set = 2·512·512·2B + acc 512·512·4B ≈ 2.1 MiB — far under the
+~128 MiB v5e VMEM so the pipeline can run several tiles in flight).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; absent on CPU-only installs
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(x: jax.Array, y: jax.Array, *,
+                  bm: int = 512, bn: int = 512, bk: int = 512,
+                  out_dtype=None, interpret: bool = False) -> jax.Array:
+    """x [M,K] @ y [K,N] with explicit VMEM tiling."""
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2, (x.shape, y.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        f"{(M, N, K)} not divisible by {(bm, bn, bk)}"
+    nk = K // bk
+    out_dtype = out_dtype or x.dtype
+    kwargs = dict(
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        interpret=interpret,
+    )
+    if _VMEM is not None:
+        kwargs["scratch_shapes"] = [_VMEM((bm, bn), jnp.float32)]
+        kernel = functools.partial(_matmul_kernel, nk=nk)
+    else:  # pragma: no cover - CPU installs always ship pltpu
+        raise RuntimeError("pallas TPU scratch unavailable")
+    return pl.pallas_call(kernel, **kwargs)(x, y)

@@ -1,0 +1,16 @@
+"""Public jit'd wrapper: Pallas on TPU, interpret-mode elsewhere."""
+import functools
+
+import jax
+
+from .kernel import matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = 512, bn: int = 512, bk: int = 512):
+    return matmul_pallas(x, y, bm=bm, bn=bn, bk=bk,
+                         interpret=not _on_tpu())

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the matmul kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,11 @@
+import functools
+
+import jax
+
+from .kernel import rmsnorm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, br: int = 256):
+    return rmsnorm_pallas(x, scale, eps=eps, br=br,
+                          interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for rmsnorm."""
+from repro.models.layers import rms_norm
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    return rms_norm({"scale": scale}, x, eps)

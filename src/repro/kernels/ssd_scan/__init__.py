@@ -1,0 +1,4 @@
+from .ops import ssd
+from .ref import ssd_chunked, ssd_reference
+
+__all__ = ["ssd", "ssd_chunked", "ssd_reference"]

@@ -1,0 +1,86 @@
+"""Mamba2 SSD chunk kernel: intra-chunk output + chunk state, per grid step.
+
+The SSD decomposition splits work into (a) quadratic-in-chunk local terms
+and (b) a short inter-chunk recurrence.  This kernel computes (a) plus the
+per-chunk states entirely in VMEM — grid (B, H, nc), blocks of one
+(batch, head, chunk) each: x [Q,P], dt [Q], B/C [Q,N].  The tiny
+inter-chunk scan and the final C·h_in combination stay in XLA (ops.py) —
+they are O(nc·P·N) and memory-bound either way.
+
+VMEM at Q=256, P=64, N=128: decay [Q,Q] fp32 + state [P,N] + tiles ≈ 0.6 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, state_ref, ecs_ref, *, Q: int):
+    x = x_ref[0, :, 0].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # [Q]
+    A = a_ref[0].astype(jnp.float32)                # scalar
+    Bm = b_ref[0].astype(jnp.float32)               # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)               # [Q, N]
+
+    a = dt * A                                      # [Q] (negative)
+    a_cs = jnp.cumsum(a)                            # inclusive
+    # intra-chunk: y_q = sum_{k<=q} exp(a_cs_q - a_cs_k) (C_q·B_k) dt_k x_k
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q,Q]
+    decay = jnp.exp(a_cs[:, None] - a_cs[None, :])
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    w = jnp.where(ki <= qi, cb * decay, 0.0) * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q,P]
+    # chunk state: S = sum_k exp(a_tot - a_cs_k) dt_k x_k ⊗ B_k   [P,N]
+    edecay = jnp.exp(a_cs[-1] - a_cs) * dt                        # [Q]
+    state = jax.lax.dot_general(x * edecay[:, None], Bm,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+    state_ref[0, 0, 0] = state
+    ecs_ref[0, :, 0] = jnp.exp(a_cs)
+
+
+def ssd_chunk_pallas(x, dt, A, B, C, *, chunk: int = 128,
+                     interpret: bool = False):
+    """x [b,l,h,p]; dt [b,l,h]; A [h]; B/C [b,l,n] (group dim folded).
+
+    Returns (y_intra [b,l,h,p] fp32-accurate in x.dtype,
+             states [b,nc,h,p,n] fp32, exp_a_cs [b,l,h] fp32).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, l)
+    assert l % Q == 0
+    nc = l // Q
+    grid = (b, h, nc)
+    y, states, ecs = pl.pallas_call(
+        functools.partial(_ssd_chunk_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, Q, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, Q, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, 1, p, n),
+                         lambda bi, hi, ci: (bi, ci, hi, 0, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, l, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, states, ecs

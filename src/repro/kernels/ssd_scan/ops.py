@@ -1,0 +1,43 @@
+"""SSD via the Pallas chunk kernel + XLA inter-chunk recurrence."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernel import ssd_chunk_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(x, dt, A, B, C, D, *, chunk: int = 128, init_state=None):
+    """Same contract as repro.models.layers.ssd_chunked (g=1 folded).
+
+    x [b,l,h,p]; dt [b,l,h]; A [h]; B,C [b,l,g,n]; D [h].
+    Returns (y [b,l,h,p], final_state [b,h,p,n]).
+    """
+    b, l, h, p = x.shape
+    interpret = jax.default_backend() != "tpu"
+    y_intra, states, ecs = ssd_chunk_pallas(
+        x, dt, A, B[:, :, 0], C[:, :, 0], chunk=chunk, interpret=interpret)
+    nc = states.shape[1]
+    Q = l // nc
+    # decay across a whole chunk = exp(a_tot) = ecs at the chunk's last row
+    etot = ecs.reshape(b, nc, Q, h)[:, :, -1]            # [b,nc,h]
+
+    h0 = (jnp.zeros((b, h, p, float_n := states.shape[-1]), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+
+    def carry(prev, inp):
+        s_c, e_c = inp
+        new = prev * e_c[:, :, None, None] + s_c
+        return new, prev                                  # emit entering state
+
+    hfin, h_in = lax.scan(carry, h0, (jnp.moveaxis(states, 1, 0),
+                                      jnp.moveaxis(etot, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                       # [b,nc,h,p,n]
+    Cc = C[:, :, 0].astype(jnp.float32).reshape(b, nc, Q, -1)
+    ecs_c = ecs.reshape(b, nc, Q, h)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, ecs_c, h_in)
+    y = y_intra.astype(jnp.float32) + y_inter.reshape(b, l, h, p)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), hfin

@@ -1,0 +1,4 @@
+"""Pure-jnp oracle: the sequential SSD recurrence."""
+from repro.models.layers import ssd_chunked, ssd_reference
+
+__all__ = ["ssd_reference", "ssd_chunked"]

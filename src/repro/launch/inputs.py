@@ -1,0 +1,113 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for every model input.
+
+The four LM shapes from the brief; ``kind`` selects which step gets lowered:
+  * train   → train_step(state, batch)
+  * prefill → prefill(params, batch, cache)
+  * decode  → decode_step(params, tokens, cache)   (one token, full cache)
+
+``input_specs(cfg, shape)`` builds weak-type-correct, shardable
+ShapeDtypeStructs — no device allocation ever happens for full-size configs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """long_500k only for sub-quadratic families (brief-mandated skip)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("long_500k skipped: pure full-attention architecture "
+                       "(quadratic prefill at 524k); run only for "
+                       "SSM/hybrid per the brief")
+    return True, ""
+
+
+def token_batch_structs(cfg: ModelConfig, batch: int, seq: int,
+                        with_labels: bool) -> Dict[str, Any]:
+    i32 = jnp.int32
+    out: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+    }
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    if cfg.family == "vlm":
+        f32 = jnp.float32
+        out["vision_embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                                    f32)
+        out["vision_mask"] = jax.ShapeDtypeStruct((batch, seq), jnp.bool_)
+        out["positions"] = jax.ShapeDtypeStruct((3, batch, seq), i32)
+    if cfg.family in ("audio", "encdec"):
+        out["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model),
+                                             jnp.float32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Structs for the *batch* of the given shape (train/prefill kinds)."""
+    sh = SHAPES[shape_name]
+    if sh.kind == "train":
+        return token_batch_structs(cfg, sh.global_batch, sh.seq_len,
+                                   with_labels=True)
+    if sh.kind == "prefill":
+        return token_batch_structs(cfg, sh.global_batch, sh.seq_len,
+                                   with_labels=False)
+    # decode: tokens are [B,1]; the cache is built separately
+    return {"tokens": jax.ShapeDtypeStruct((sh.global_batch, 1), jnp.int32)}
+
+
+def cache_structs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """eval_shape of init_cache for decode shapes (no allocation)."""
+    from repro.models.api import build
+    sh = SHAPES[shape_name]
+    api = build(cfg)
+    return jax.eval_shape(
+        lambda: api.init_cache(sh.global_batch, sh.seq_len))
+
+
+def concrete_batch(cfg: ModelConfig, shape_name: str, key=None,
+                   batch_override: Optional[int] = None,
+                   seq_override: Optional[int] = None) -> Dict[str, Any]:
+    """Small concrete batch for smoke tests / examples (CPU-size)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    sh = SHAPES[shape_name]
+    B = batch_override or sh.global_batch
+    S = seq_override or sh.seq_len
+    structs = token_batch_structs(cfg, B, S, with_labels=(sh.kind == "train"))
+
+    def make(k, s):
+        if s.dtype == jnp.int32:
+            return jax.random.randint(k, s.shape, 0, cfg.vocab_size, s.dtype)
+        if s.dtype == jnp.bool_:
+            return jnp.zeros(s.shape, s.dtype)
+        return jax.random.normal(k, s.shape, s.dtype) * 0.02
+
+    keys = jax.random.split(key, len(structs))
+    out = {name: make(k, s)
+           for (name, s), k in zip(sorted(structs.items()), keys)}
+    if "positions" in out:
+        B_, S_ = out["tokens"].shape
+        out["positions"] = jnp.broadcast_to(
+            jnp.arange(S_, dtype=jnp.int32)[None, None], (3, B_, S_))
+    return out

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (device count is locked at first jax init, and smoke tests
+must see 1 CPU device while the dry-run sees 512 placeholders).
+
+Mesh shapes (TPU v5e pods):
+  * single-pod: (16, 16)    axes (data, model)   — 256 chips
+  * multi-pod:  (2, 16, 16) axes (pod, data, model) — 512 chips
+
+Axis order is outermost-first so DP gradient reductions decompose
+hierarchically: reduce-scatter within a pod over 'data' (ICI), then the
+small cross-pod all-reduce over 'pod' (DCN).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh for tests/examples (e.g. (2,4) on 8 CPU devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: Optional[int] = None) -> Mesh:
+    """Best-effort mesh over whatever devices exist (CPU smoke runs)."""
+    n = jax.device_count()
+    model = model or 1
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

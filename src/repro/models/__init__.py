@@ -1,0 +1,6 @@
+"""repro.models — pure-JAX composable model zoo (the system under test)."""
+from .api import ModelApi, build, family_module
+from .config import ModelConfig, get_config, list_archs, register_arch
+
+__all__ = ["ModelApi", "ModelConfig", "build", "family_module",
+           "get_config", "list_archs", "register_arch"]

@@ -1,0 +1,61 @@
+"""Unified model API — one surface over all families.
+
+``build(cfg)`` returns a :class:`ModelApi` whose members close over the
+config; the launch/train/serve layers and the model_scope benchmarks only
+ever talk to this surface, never to family modules directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, ssm, transformer
+from .config import ModelConfig
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "audio": encdec,
+}
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Dict]
+    loss: Callable[[Dict, Dict], Any]            # (params, batch) -> (loss, metrics)
+    logits: Callable[[Dict, Dict], Any]
+    init_cache: Callable[..., Dict]
+    prefill: Callable[[Dict, Dict, Dict], Any]   # (params, batch, cache)
+    decode_step: Callable[[Dict, jax.Array, Dict], Any]
+    unembed_table: Callable[[Dict], jax.Array]
+
+
+def family_module(cfg: ModelConfig):
+    if cfg.family not in _FAMILIES:
+        raise KeyError(f"unknown family {cfg.family!r}")
+    return _FAMILIES[cfg.family]
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    mod = family_module(cfg)
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: mod.init(cfg, key),
+        loss=lambda params, batch: mod.loss(cfg, params, batch),
+        logits=lambda params, batch: mod.logits(cfg, params, batch),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16:
+            mod.init_cache(cfg, batch, max_len, dtype),
+        prefill=lambda params, batch, cache, **kw: mod.prefill(
+            cfg, params, batch, cache, **kw),
+        decode_step=lambda params, tokens, cache:
+            mod.decode_step(cfg, params, tokens, cache),
+        unembed_table=mod.unembed_table,
+    )

@@ -1,0 +1,134 @@
+"""Mamba2 (SSD) stack — attention-free LM (mamba2-780m).
+
+Sub-quadratic: prefill is chunked-SSD (linear in S), decode is an O(1)
+recurrent state update — which is why this family runs the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    blocks = []
+    for i in range(cfg.num_layers):
+        blocks.append({
+            "ln": L.init_rmsnorm(cfg.d_model),
+            "mamba": L.init_mamba2(keys[i], cfg),
+        })
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    p: Params = {
+        "embed": L.init_embed(keys[-1], cfg.vocab_size, cfg.d_model),
+        "blocks": stacked,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"table": L.embed_init(keys[-2],
+                                              (cfg.vocab_size, cfg.d_model))}
+    return p
+
+
+def unembed_table(params: Params) -> jax.Array:
+    return (params.get("unembed") or params["embed"])["table"]
+
+
+def hidden(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+           collect_state: bool = False):
+    x = L.embed(params["embed"], batch["tokens"], jnp.dtype(cfg.dtype))
+
+    def block(x, p):
+        h = L.rms_norm(p["ln"], x, cfg.norm_eps)
+        if collect_state:
+            y, state, tail = L.mamba2_block(p["mamba"], h, cfg,
+                                            return_state=True)
+            return x + y, (state, tail)
+        y = L.mamba2_block(p["mamba"], h, cfg)
+        return x + y, None
+
+    if cfg.remat == "full":
+        block = jax.checkpoint(block)
+    x, caches = lax.scan(block, x, params["blocks"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32), caches
+
+
+def logits(cfg: ModelConfig, params: Params, batch: Dict[str, Any]):
+    h, aux, _ = hidden(cfg, params, batch)
+    return L.unembed(unembed_table(params), h,
+                     jnp.dtype(cfg.logits_dtype)), aux
+
+
+def loss(cfg: ModelConfig, params: Params, batch: Dict[str, Any]):
+    h, aux, _ = hidden(cfg, params, batch)
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.concatenate([batch["tokens"][:, 1:],
+                                  batch["tokens"][:, -1:]], axis=1)
+    nll = L.chunked_loss(unembed_table(params), h, labels,
+                         cfg.loss_chunk, jnp.dtype(cfg.logits_dtype))
+    return nll, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di, gn = cfg.ssm_d_inner, cfg.ssm_groups * cfg.ssm_state
+    km1, Ln = cfg.ssm_conv - 1, cfg.num_layers
+    return {
+        # recurrent state is carried fp32: it integrates over 500k steps
+        "state": jnp.zeros((Ln, batch, H, P, N), jnp.float32),
+        "conv": {"x": jnp.zeros((Ln, batch, km1, di), dtype),
+                 "B": jnp.zeros((Ln, batch, km1, gn), dtype),
+                 "C": jnp.zeros((Ln, batch, km1, gn), dtype)},
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            cache: Dict[str, Any]):
+    h, _aux, caches = hidden(cfg, params, batch, collect_state=True)
+    states, tails = caches                       # [L,B,H,P,N], {x,B,C}
+    S = batch["tokens"].shape[1]
+    cache = {
+        "state": states.astype(cache["state"].dtype),
+        "conv": jax.tree_util.tree_map(
+            lambda t, c: t.astype(c.dtype), tails, cache["conv"]),
+        "pos": jnp.asarray(S, jnp.int32),
+    }
+    out = L.unembed(unembed_table(params), h[:, -1:],
+                    jnp.dtype(cfg.logits_dtype))
+    return out, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Dict[str, Any]):
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+
+    def block(x, inp):
+        p, state, tail = inp
+        h = L.rms_norm(p["ln"], x, cfg.norm_eps)
+        y, state_new, tail_new = L.mamba2_decode_step(
+            p["mamba"], h, cfg, ssm_state=state, conv_tail=tail)
+        tail_new = jax.tree_util.tree_map(
+            lambda a, b: a.astype(b.dtype), tail_new, tail)
+        return x + y, (state_new.astype(state.dtype), tail_new)
+
+    x, (state_new, conv_new) = lax.scan(
+        block, x, (params["blocks"], cache["state"], cache["conv"]))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    out = L.unembed(unembed_table(params), x, jnp.dtype(cfg.logits_dtype))
+    return out, {"state": state_new, "conv": conv_new,
+                 "pos": cache["pos"] + 1}

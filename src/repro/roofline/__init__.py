@@ -1,0 +1,6 @@
+"""repro.roofline — static performance analysis of compiled XLA artifacts."""
+from .analysis import (RooflineTerms, analyze_compiled, collective_bytes,
+                       model_flops, roofline_terms)
+
+__all__ = ["RooflineTerms", "analyze_compiled", "collective_bytes",
+           "model_flops", "roofline_terms"]

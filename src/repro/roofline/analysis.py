@@ -1,0 +1,152 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e model).
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the post-SPMD HLO text and sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute instruction.  The dominant term is the bottleneck the
+§Perf loop iterates on.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.sysinfo import TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "c64": 8,
+    "s64": 8, "u64": 8, "f64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shape literal: bf16[128,4096]{1,0} or f32[] — capture dtype + dims
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+# an HLO instruction line: "%name = <shape(s)> opcode(...operands...)"
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(" +
+    "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum operand bytes per collective kind from (post-SPMD) HLO text.
+
+    ``-start``/``-done`` async pairs are counted once (on -start; the -done
+    line carries no operand shapes of its own in the same form, but guard by
+    skipping lines with '-done(' anyway).
+    """
+    per_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind, operands = m.group(1), m.group(2)
+        nbytes = sum(_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(operands))
+        if nbytes == 0:
+            continue
+        per_kind[kind] += nbytes
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"total_bytes": total, "per_kind_bytes": per_kind,
+            "per_kind_count": counts}
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes_: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float              # MODEL_FLOPS / HLO_FLOPs
+    bytes_per_device: float = 0.0
+    notes: str = ""
+    per_kind: Dict[str, int] = field(default_factory=dict)
+
+    def bound_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+def model_flops(cfg, tokens: int, kind: str = "train") -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); 2·N·D for inference kinds."""
+    n = cfg.num_active_params()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def roofline_terms(arch: str, shape: str, mesh_name: str, chips: int,
+                   flops: float, bytes_accessed: float, coll_bytes: float,
+                   mflops: float, bytes_per_device: float = 0.0,
+                   notes: str = "", per_kind=None) -> RooflineTerms:
+    """``flops``/``bytes_accessed``/``coll_bytes`` are PER-DEVICE (the
+    post-SPMD HLO module is the per-device program), so the brief's
+    ``X / (chips × rate)`` denominators reduce to ``X / rate`` here —
+    global = per-device × chips throughout."""
+    hw = TPU_V5E
+    compute_s = flops / hw["peak_bf16_flops"]
+    memory_s = bytes_accessed / hw["hbm_bandwidth"]
+    collective_s = coll_bytes / hw["ici_link_bandwidth"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=bytes_accessed,
+        collective_bytes_=coll_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=mflops,
+        useful_ratio=(mflops / (flops * chips) if flops else 0.0),
+        bytes_per_device=bytes_per_device, notes=notes,
+        per_kind=per_kind or {})
+
+
+def analyze_compiled(compiled, arch: str, shape: str, mesh_name: str,
+                     chips: int, mflops: float,
+                     notes: str = "") -> RooflineTerms:
+    """Full analysis of a jax ``Compiled`` object.
+
+    Uses the loop-aware HLO analyzer (repro.roofline.hlo) — XLA's own
+    cost_analysis counts scan bodies once, undercounting scan-over-layers
+    models by ~num_layers×.
+    """
+    from .hlo import analyze_hlo
+    st = analyze_hlo(compiled.as_text())
+    mem = compiled.memory_analysis()
+    bpd = 0.0
+    if mem is not None:
+        bpd = (getattr(mem, "argument_size_in_bytes", 0)
+               + getattr(mem, "temp_size_in_bytes", 0))
+    return roofline_terms(arch, shape, mesh_name, chips, st.flops,
+                          st.bytes_accessed, st.collective_bytes, mflops,
+                          bytes_per_device=bpd, notes=notes,
+                          per_kind=dict(st.per_kind_bytes))

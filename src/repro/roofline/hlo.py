@@ -1,0 +1,356 @@
+"""Static analyzer for optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE — our models
+are scan-over-layers (and flash attention is a scan over chunk pairs), so
+its FLOPs undercount by ~L×pairs.  This module re-derives per-device
+FLOPs / HBM-bytes / collective-bytes from the HLO text itself, with loop
+trip-count multipliers:
+
+  * computations are parsed into per-computation symbol tables
+    (instruction name → shape), so operand shapes resolve exactly;
+  * ``while`` trip counts come from the integer constant in the loop
+    condition's ``compare``;
+  * FLOPs: 2·prod(out)·prod(contracting dims) per ``dot`` (+convolutions),
+    walked through calls/fusions/whiles with multipliers;
+  * HBM bytes: Σ (output + operands) over *top-level* instructions of
+    non-fusion computations — fusion nodes count as single ops, which
+    approximates post-fusion buffer traffic (a roofline-style
+    no-cache-reuse estimate);
+  * collective bytes: Σ operand sizes per collective op × loop multiplier
+    (the brief's definition), with per-kind breakdown.
+
+Validated against hand-computed counts in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"(" + "|".join(sorted(_DTYPE_BYTES, key=len, reverse=True)) +
+    r")\[([\d,]*)\](?:\{[^}]*\})?")
+
+# shape group is lazy-anything: tuple shapes may contain /*index=N*/
+# comments (with '='), so the opcode is just the first word followed by '('
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)([\w\-]+)\((.*)$")
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{$")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+@dataclass
+class Instr:
+    name: str
+    shape_str: str
+    opcode: str
+    rest: str            # everything after the opening paren
+
+    def operands(self) -> List[str]:
+        # operand names: %foo or bare foo.1 tokens before "), attr=..."
+        depth, out, cur = 1, [], []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            cur.append(ch)
+        arglist = "".join(cur)
+        return re.findall(r"%([\w\.\-]+)", arglist)
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=(\{[^}]*\}|\[[^\]]*\]<=\[\d+\]|[\w\.\-%]+)",
+                      self.rest)
+        return m.group(1) if m else None
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr] = field(default_factory=dict)
+
+    def shapes(self, name: str) -> List[Tuple[str, int]]:
+        """[(dtype, numel)] for an instruction's (possibly tuple) shape."""
+        ins = self.instrs.get(name)
+        if ins is None:
+            return []
+        return parse_shape(ins.shape_str)
+
+
+def parse_shape(s: str) -> List[Tuple[str, int]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(s):
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def shape_bytes(s: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * n for dt, n in parse_shape(s))
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1))
+            continue
+        if stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape_str, opcode, rest = m.groups()
+            cur.instrs[name] = Instr(name, shape_str.strip(), opcode, rest)
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Fallback: largest integer constant in the loop condition."""
+    best = 1
+    for ins in cond.instrs.values():
+        if ins.opcode == "constant":
+            m = re.match(r"([\-\d]+)", ins.rest)
+            if m:
+                try:
+                    best = max(best, int(m.group(1)))
+                except ValueError:
+                    pass
+    return best
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems = sum(n for _, n in parse_shape(ins.shape_str))
+    ops = ins.operands()
+    contract = 1
+    cdims = ins.attr("lhs_contracting_dims")
+    lhs_ins = comp.instrs.get(ops[0]) if ops else None
+    if cdims and lhs_ins is not None:
+        m = _SHAPE_RE.search(lhs_ins.shape_str)
+        if m:
+            dims = [int(d) for d in m.group(2).split(",") if d]
+            for di in re.findall(r"\d+", cdims):
+                i = int(di)
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+_FLOP_OPS = {"dot"}
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota"}
+_SLICING_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_param_traffic(called: Computation) -> Dict[int, Optional[int]]:
+    """Per-parameter HBM traffic of a fusion computation.
+
+    * consumed ONLY by slicing ops (dynamic-slice/slice/gather) → read at
+      slice granularity (scan bodies slicing one layer from the stack);
+    * consumed ONLY as the in-place target (operand 0) of
+      dynamic-update-slice → 0 (aliased; the written region is counted by
+      the fusion-output rule);
+    * otherwise → None = full parameter shape.
+    """
+    out: Dict[int, Optional[int]] = {}
+    params: Dict[str, int] = {}
+    for ins in called.instrs.values():
+        if ins.opcode == "parameter":
+            m = re.match(r"(\d+)", ins.rest)
+            if m:
+                params[ins.name] = int(m.group(1))
+    consumers: Dict[str, List[Tuple[Instr, int]]] = {}
+    for ins in called.instrs.values():
+        for pos, o in enumerate(ins.operands()):
+            if o in params:
+                consumers.setdefault(o, []).append((ins, pos))
+    for pname, idx in params.items():
+        cons = consumers.get(pname, [])
+        # slice reads + in-place DUS targets: count only the touched
+        # regions (the read-modify-write accumulator pattern of the flash
+        # pair scan: dynamic-slice(acc) ... dynamic-update-slice(acc,...))
+        if cons and all(c.opcode in _SLICING_OPS
+                        or (c.opcode == "dynamic-update-slice" and pos == 0)
+                        for c, pos in cons):
+            out[idx] = sum(shape_bytes(c.shape_str) for c, pos in cons
+                           if c.opcode in _SLICING_OPS)
+        else:
+            out[idx] = None
+    return out
+
+
+def _fusion_out_bytes(called: Computation, default: int) -> int:
+    """Fusion output traffic: a fusion whose result is dynamic-update-slice
+    writes only the updated region (the rest is aliased) — count 2× the
+    update operand per DUS instead of the whole buffer."""
+    dus = [ins for ins in called.instrs.values()
+           if ins.opcode == "dynamic-update-slice"]
+    if not dus:
+        return default
+    total = 0
+    for ins in dus:
+        ops = ins.operands()
+        if len(ops) >= 2:
+            total += 2 * sum(_DTYPE_BYTES[dt] * n
+                             for dt, n in called.shapes(ops[1]))
+    return total if total else default
+
+
+def cpu_widening_artifact_bytes(text: str) -> int:
+    """Bytes of CPU-only bf16→f32 loop-buffer widening.
+
+    The CPU backend has no native bf16 compute: scan-carried bf16 buffers
+    get an f32 twin inside while tuples ("wide" legalization).  On the TPU
+    target these buffers stay bf16, so the f32 twin's full size is memory
+    the TPU executable does not allocate.  Detected as f32 while-tuple
+    elements whose dims exactly match a bf16 sibling.
+    """
+    comps = parse_module(text)
+    artifact = 0
+    for comp in comps.values():
+        for ins in comp.instrs.values():
+            if ins.opcode != "while":
+                continue
+            dims_bf16 = set()
+            elems = _SHAPE_RE.findall(ins.shape_str)
+            for dt, dims in elems:
+                if dt == "bf16":
+                    dims_bf16.add(dims)
+            for dt, dims in elems:
+                if dt == "f32" and dims in dims_bf16:
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    artifact += 4 * n
+    return artifact
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    per_kind_bytes: Dict[str, float] = field(default_factory=dict)
+    per_kind_count: Dict[str, int] = field(default_factory=dict)
+    loop_trips: Dict[str, int] = field(default_factory=dict)
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps = parse_module(text)
+    stats = HloStats(per_kind_bytes={k: 0.0 for k in _COLLECTIVES},
+                     per_kind_count={k: 0 for k in _COLLECTIVES})
+
+    entry = None
+    for name, c in comps.items():
+        if "main" in name:
+            entry = c
+            break
+    if entry is None and comps:           # fall back: largest computation
+        entry = max(comps.values(), key=lambda c: len(c.instrs))
+    if entry is None:
+        return stats
+
+    visited_flops: set = set()
+
+    def walk(comp: Computation, mult: float, count_bytes: bool):
+        for ins in comp.instrs.values():
+            op = ins.opcode
+            if op == "while":
+                body_name = (ins.attr("body") or "").lstrip("%")
+                cond_name = (ins.attr("condition") or "").lstrip("%")
+                # best source: XLA's own analysis in backend_config
+                m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.rest)
+                if m:
+                    trips = int(m.group(1))
+                elif cond_name in comps:
+                    trips = _trip_count(comps[cond_name])
+                else:
+                    trips = 1
+                stats.loop_trips[body_name] = trips
+                if body_name in comps:
+                    walk(comps[body_name], mult * trips, count_bytes)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                tgt = (ins.attr("to_apply") or ins.attr("called_computations")
+                       or "").lstrip("%")
+                if tgt in comps:
+                    walk(comps[tgt], mult, count_bytes)
+            if op == "fusion":
+                tgt = (ins.attr("calls") or "").lstrip("%")
+                # descend for FLOPs only (dots inside fusions)
+                if tgt in comps:
+                    for sub in comps[tgt].instrs.values():
+                        if sub.opcode in _FLOP_OPS:
+                            stats.flops += mult * _dot_flops(comps[tgt], sub)
+            if op in _FLOP_OPS:
+                stats.flops += mult * _dot_flops(comp, ins)
+            # collectives (sync or -start forms)
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                opnd_bytes = 0
+                for o in ins.operands():
+                    opnd_bytes += sum(_DTYPE_BYTES[dt] * n
+                                      for dt, n in comp.shapes(o))
+                if opnd_bytes == 0:   # fall back to output size
+                    opnd_bytes = shape_bytes(ins.shape_str)
+                stats.per_kind_bytes[base] += mult * opnd_bytes
+                stats.per_kind_count[base] += int(mult)
+                stats.collective_bytes += mult * opnd_bytes
+            # bytes accessed (roofline-style, fusion-granular, slice-aware)
+            if count_bytes and op not in _SKIP_BYTES_OPS:
+                b = shape_bytes(ins.shape_str)
+                operands = ins.operands()
+                if op in _SLICING_OPS:
+                    b *= 2                       # read slice + write out
+                elif op == "dynamic-update-slice" and len(operands) >= 2:
+                    upd = sum(_DTYPE_BYTES[dt] * n
+                              for dt, n in comp.shapes(operands[1]))
+                    b = 2 * upd                  # read update + write region
+                elif op == "fusion":
+                    tgt = (ins.attr("calls") or "").lstrip("%")
+                    traffic = (_fusion_param_traffic(comps[tgt])
+                               if tgt in comps else {})
+                    if tgt in comps:
+                        b = _fusion_out_bytes(comps[tgt], b)
+                    for i, o in enumerate(operands):
+                        t = traffic.get(i)
+                        if t is not None:
+                            b += t
+                        else:
+                            b += sum(_DTYPE_BYTES[dt] * n
+                                     for dt, n in comp.shapes(o))
+                else:
+                    for o in operands:
+                        b += sum(_DTYPE_BYTES[dt] * n
+                                 for dt, n in comp.shapes(o))
+                stats.bytes_accessed += mult * b
+
+    walk(entry, 1.0, True)
+    return stats

@@ -1,0 +1,128 @@
+"""Static profiler: top HBM-traffic / FLOPs contributors of a dry-run cell.
+
+The §Perf loop's "profile" on a CPU-only container: ranks instructions by
+loop-trip-weighted bytes/flops so the hypothesis targets the actual
+dominant op, not a guess.
+
+``python -m repro.roofline.profile --arch X --shape Y [--override k=v]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+from typing import List, Tuple
+
+from .hlo import (_DTYPE_BYTES, _SKIP_BYTES_OPS, _SLICING_OPS, _dot_flops,
+                  _fusion_out_bytes, _fusion_param_traffic, parse_module,
+                  parse_shape, shape_bytes)
+
+
+def top_contributors(text: str, n: int = 15):
+    comps = parse_module(text)
+    entry = None
+    for name, c in comps.items():
+        if "main" in name:
+            entry = c
+            break
+    if entry is None:
+        return [], []
+    byte_rows: List[Tuple[float, str, str, str]] = []
+    flop_rows: List[Tuple[float, str, str, str]] = []
+
+    def walk(comp, mult):
+        for ins in comp.instrs.values():
+            op = ins.opcode
+            if op == "while":
+                body = (ins.attr("body") or "").lstrip("%")
+                m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}',
+                              ins.rest)
+                trips = int(m.group(1)) if m else 1
+                if body in comps:
+                    walk(comps[body], mult * trips)
+                continue
+            if op in _SKIP_BYTES_OPS:
+                continue
+            operands = ins.operands()
+            if op == "dot":
+                flop_rows.append((mult * _dot_flops(comp, ins), op,
+                                  ins.name, comp.name))
+            if op == "fusion":
+                tgt = (ins.attr("calls") or "").lstrip("%")
+                if tgt in comps:
+                    for sub in comps[tgt].instrs.values():
+                        if sub.opcode == "dot":
+                            flop_rows.append(
+                                (mult * _dot_flops(comps[tgt], sub),
+                                 "dot(fused)", ins.name, comp.name))
+            b = shape_bytes(ins.shape_str)
+            if op in _SLICING_OPS:
+                b *= 2
+            elif op == "dynamic-update-slice" and len(operands) >= 2:
+                upd = sum(_DTYPE_BYTES[dt] * x
+                          for dt, x in comp.shapes(operands[1]))
+                b = 2 * upd
+            elif op == "fusion":
+                tgt = (ins.attr("calls") or "").lstrip("%")
+                traffic = (_fusion_param_traffic(comps[tgt])
+                           if tgt in comps else {})
+                if tgt in comps:
+                    b = _fusion_out_bytes(comps[tgt], b)
+                for i, o in enumerate(operands):
+                    t = traffic.get(i)
+                    b += (t if t is not None else
+                          sum(_DTYPE_BYTES[dt] * x
+                              for dt, x in comp.shapes(o)))
+            else:
+                for o in operands:
+                    b += sum(_DTYPE_BYTES[dt] * x
+                             for dt, x in comp.shapes(o))
+            byte_rows.append((mult * b, op, ins.name, comp.name))
+
+    walk(entry, 1.0)
+    byte_rows.sort(reverse=True)
+    flop_rows.sort(reverse=True)
+    return byte_rows[:n], flop_rows[:n]
+
+
+def profile_cell(arch: str, shape: str, overrides=None, multi_pod=False,
+                 n: int = 15):
+    from repro.launch.dryrun import lower_cell
+    compiled, meta = lower_cell(arch, shape, multi_pod=multi_pod,
+                                overrides=overrides or {})
+    byte_rows, flop_rows = top_contributors(compiled.as_text(), n)
+    return meta, byte_rows, flop_rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--override", action="append", default=[])
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args(argv)
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+    meta, byte_rows, flop_rows = profile_cell(args.arch, args.shape,
+                                              overrides, n=args.top)
+    r = meta["roofline"]
+    print(f"terms: compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s"
+          f" collective={r['collective_s']:.3f}s dominant={r['dominant']}")
+    print("\ntop HBM-traffic contributors (per device):")
+    for b, op, name, cn in byte_rows:
+        print(f"  {b/1e9:9.1f} GB  {op:22s} {name[:40]:40s} {cn[:40]}")
+    print("\ntop FLOPs contributors (per device):")
+    for f, op, name, cn in flop_rows:
+        print(f"  {f/1e12:9.2f} TF  {op:22s} {name[:40]:40s} {cn[:40]}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

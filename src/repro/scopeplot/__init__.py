@@ -1,0 +1,19 @@
+"""repro.scopeplot — the ScopePlot package (paper §V-A).
+
+Object model + manipulation library for Google-Benchmark JSON files, plus a
+CLI (``python -m repro.scopeplot``) with the paper's subcommands:
+
+  * ``spec``         — YAML-spec-driven plots (line w/ error bars, bar,
+                       regression)
+  * ``deps``         — emit make-format dependencies of a spec file
+  * ``bar``          — one-shot bar plot without a spec file
+  * ``cat``          — structure-preserving concatenation of JSON files
+  * ``filter_name``  — keep benchmarks whose name matches a regex
+"""
+from .model import BenchmarkFile, BenchmarkRecord, cat, filter_name, load, loads
+from .frame import Frame
+
+__all__ = [
+    "BenchmarkFile", "BenchmarkRecord", "Frame",
+    "cat", "filter_name", "load", "loads",
+]

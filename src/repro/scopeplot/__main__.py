@@ -1,0 +1,70 @@
+"""scope_plot CLI — ``python -m repro.scopeplot <subcommand>`` (paper §V-A)."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from .model import BenchmarkFile, cat, load
+from .plot import load_spec, quick_bar, render_spec, spec_dependencies
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(prog="scope_plot")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    sp = sub.add_parser("spec", help="render a plot from a YAML spec file")
+    sp.add_argument("spec_file")
+    sp.add_argument("--output", default=None)
+
+    dp = sub.add_parser("deps", help="emit make-format deps of a spec file")
+    dp.add_argument("spec_file")
+    dp.add_argument("--target", default=None,
+                    help="make target name (default: the spec's output)")
+
+    bp = sub.add_parser("bar", help="one-shot bar plot from a JSON file")
+    bp.add_argument("json_file")
+    bp.add_argument("--x-field", required=True)
+    bp.add_argument("--y-field", required=True)
+    bp.add_argument("--title", default="")
+    bp.add_argument("--output", default="bar.png")
+    bp.add_argument("--filter", default=".*")
+
+    cp = sub.add_parser("cat", help="structure-preserving concatenation")
+    cp.add_argument("json_files", nargs="+")
+
+    fp = sub.add_parser("filter_name",
+                        help="keep benchmarks matching a regex")
+    fp.add_argument("json_file")
+    fp.add_argument("regex")
+
+    args = p.parse_args(argv)
+
+    if args.cmd == "spec":
+        spec = load_spec(args.spec_file)
+        out = render_spec(spec, output=args.output)
+        print(out)
+    elif args.cmd == "deps":
+        spec = load_spec(args.spec_file)
+        deps = spec_dependencies(spec)
+        target = args.target or spec.get("output", "plot.png")
+        print(f"{target}: " + " ".join(deps))
+    elif args.cmd == "bar":
+        out = quick_bar(args.json_file, args.x_field, args.y_field,
+                        title=args.title, output=args.output,
+                        regex=args.filter)
+        print(out)
+    elif args.cmd == "cat":
+        merged = cat([load(f) for f in args.json_files])
+        json.dump(merged.to_dict(), sys.stdout, indent=2)
+        print()
+    elif args.cmd == "filter_name":
+        bf = load(args.json_file).filter_name(args.regex)
+        json.dump(bf.to_dict(), sys.stdout, indent=2)
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

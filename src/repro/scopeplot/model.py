@@ -1,0 +1,200 @@
+"""Object model for Google-Benchmark JSON files (paper §V-A.6).
+
+ScopePlot "has an object model for JSON files and various methods for
+filtering them and converting them to pandas DataFrames".  We mirror that:
+:class:`BenchmarkFile` wraps a document, records are :class:`BenchmarkRecord`
+views, and conversions target :class:`repro.scopeplot.frame.Frame` (a small
+columnar table; pandas is not available offline).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Union
+
+from .frame import Frame
+
+_STANDARD_FIELDS = {
+    "name", "run_name", "run_type", "repetitions", "repetition_index",
+    "threads", "iterations", "real_time", "cpu_time", "time_unit",
+    "aggregate_name", "bytes_per_second", "items_per_second", "label",
+    "error_occurred", "error_message", "skipped", "skip_message",
+}
+
+
+@dataclass
+class BenchmarkRecord:
+    """One entry of the ``benchmarks`` array."""
+    raw: Dict[str, Any]
+
+    @property
+    def name(self) -> str:
+        return self.raw.get("name", "")
+
+    @property
+    def real_time(self) -> Optional[float]:
+        return self.raw.get("real_time")
+
+    @property
+    def time_unit(self) -> str:
+        return self.raw.get("time_unit", "ns")
+
+    def real_time_seconds(self) -> Optional[float]:
+        scale = {"ns": 1e-9, "us": 1e-6, "ms": 1e-3, "s": 1.0}
+        t = self.real_time
+        return None if t is None else t * scale.get(self.time_unit, 1.0)
+
+    @property
+    def counters(self) -> Dict[str, Any]:
+        return {k: v for k, v in self.raw.items()
+                if k not in _STANDARD_FIELDS}
+
+    def get(self, key: str, default: Any = None) -> Any:
+        return self.raw.get(key, default)
+
+    def args(self) -> List[str]:
+        """Arg components parsed back out of the GB name.
+
+        Components that are ``name:value`` or pure numbers; leading
+        scope/family path components are skipped.
+        """
+        out = []
+        for part in self.name.split("/")[1:]:
+            if ":" in part or part.replace(".", "", 1).isdigit():
+                out.append(part)
+        return out
+
+    def arg(self, key_or_index: Union[str, int]) -> Optional[str]:
+        parts = self.args()
+        if isinstance(key_or_index, int):
+            return parts[key_or_index] if key_or_index < len(parts) else None
+        for p in parts:
+            if p.startswith(key_or_index + ":"):
+                return p.split(":", 1)[1]
+        return None
+
+
+@dataclass
+class BenchmarkFile:
+    """A whole GB-JSON document: ``context`` + ``benchmarks``."""
+    context: Dict[str, Any] = field(default_factory=dict)
+    records: List[BenchmarkRecord] = field(default_factory=list)
+
+    # -- I/O ------------------------------------------------------------
+    @classmethod
+    def from_dict(cls, doc: Dict[str, Any]) -> "BenchmarkFile":
+        return cls(context=doc.get("context", {}),
+                   records=[BenchmarkRecord(b)
+                            for b in doc.get("benchmarks", [])])
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"context": self.context,
+                "benchmarks": [r.raw for r in self.records]}
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2)
+
+    # -- manipulation ------------------------------------------------
+    def filter_name(self, pattern: str) -> "BenchmarkFile":
+        """Paper §V-A.5: keep only records whose name matches ``pattern``."""
+        rx = re.compile(pattern)
+        return BenchmarkFile(
+            context=self.context,
+            records=[r for r in self.records if rx.search(r.name)],
+        )
+
+    def without_aggregates(self) -> "BenchmarkFile":
+        return BenchmarkFile(
+            context=self.context,
+            records=[r for r in self.records
+                     if r.get("run_type") != "aggregate"],
+        )
+
+    def without_errors(self) -> "BenchmarkFile":
+        return BenchmarkFile(
+            context=self.context,
+            records=[r for r in self.records
+                     if not r.get("error_occurred")
+                     and not r.get("skipped")],
+        )
+
+    def transform(self, field: str, fn) -> "BenchmarkFile":
+        """Per-series data transformation (spec files use eval exprs)."""
+        out = []
+        for r in self.records:
+            raw = dict(r.raw)
+            if field in raw:
+                raw[field] = fn(raw[field])
+            out.append(BenchmarkRecord(raw))
+        return BenchmarkFile(context=self.context, records=out)
+
+    # -- conversion ------------------------------------------------------
+    def to_frame(self, fields: Optional[List[str]] = None) -> Frame:
+        """Paper: "converting them to pandas DataFrames"."""
+        if not self.records:
+            return Frame({})
+        if fields is None:
+            keys: List[str] = []
+            for r in self.records:
+                for k in r.raw:
+                    if k not in keys:
+                        keys.append(k)
+            fields = keys
+        cols = {k: [r.raw.get(k) for r in self.records] for k in fields}
+        return Frame(cols)
+
+    def xy(self, x: str, y: str = "real_time"):
+        """Extract (x, y) series; x may be a name-arg (``n``) or a field."""
+        xs, ys = [], []
+        for r in self.records:
+            if r.get("run_type") == "aggregate":
+                continue
+            xv = r.get(x)
+            if xv is None:
+                xv = r.arg(x)
+            yv = r.get(y)
+            if xv is None or yv is None:
+                continue
+            try:
+                xv = float(xv)
+            except (TypeError, ValueError):
+                pass
+            xs.append(xv)
+            ys.append(float(yv))
+        return xs, ys
+
+    def __iter__(self) -> Iterator[BenchmarkRecord]:
+        return iter(self.records)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+
+def load(path) -> BenchmarkFile:
+    with open(path) as f:
+        return BenchmarkFile.from_dict(json.load(f))
+
+
+def loads(text: str) -> BenchmarkFile:
+    return BenchmarkFile.from_dict(json.loads(text))
+
+
+def cat(files: Iterable[BenchmarkFile]) -> BenchmarkFile:
+    """Paper §V-A.4: structure-preserving concatenation.
+
+    Unix ``cat`` would append JSON bodies and yield a malformed result;
+    this concatenates the ``benchmarks`` arrays under the first context.
+    """
+    files = list(files)
+    if not files:
+        return BenchmarkFile()
+    out = BenchmarkFile(context=dict(files[0].context))
+    for f in files:
+        out.records.extend(f.records)
+    return out
+
+
+def filter_name(f: BenchmarkFile, pattern: str) -> BenchmarkFile:
+    return f.filter_name(pattern)

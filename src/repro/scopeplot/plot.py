@@ -1,0 +1,147 @@
+"""YAML-spec-driven plotting (paper §V-A.1).
+
+A *spec file* controls the plot type (line with error bars, bar plot,
+linear-regression plot with error bars), the source JSON file for each data
+series, regex filters to extract the desired data, per-series scaling
+transformations, and styling.  Mirrors ScopePlot's spec schema::
+
+    title: SAXPY throughput
+    type: line            # line | bar | regression
+    output: saxpy.png
+    x_axis: {label: elements, scale: log}
+    y_axis: {label: GB/s}
+    series:
+      - label: cpu
+        input_file: results.json
+        regex: "example/saxpy.*"
+        xfield: n                  # GB name-arg or record field
+        yfield: bytes_per_second
+        yscale: 1.0e-9
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import yaml
+
+from .model import BenchmarkFile, load
+
+import matplotlib
+matplotlib.use("Agg")                     # headless
+import matplotlib.pyplot as plt           # noqa: E402
+
+
+def load_spec(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        spec = yaml.safe_load(f)
+    if not isinstance(spec, dict) or "series" not in spec:
+        raise ValueError(f"invalid spec file {path!r}: needs a 'series' list")
+    return spec
+
+
+def spec_dependencies(spec: Dict[str, Any]) -> List[str]:
+    """Paper §V-A.2 (deps): the JSON files a spec reads."""
+    out: List[str] = []
+    for s in spec.get("series", []):
+        p = s.get("input_file")
+        if p and p not in out:
+            out.append(p)
+    return out
+
+
+def _series_xy(series: Dict[str, Any], base_dir: str = "."
+               ) -> Tuple[List[float], List[float], List[float]]:
+    path = series["input_file"]
+    if not os.path.isabs(path):
+        path = os.path.join(base_dir, path)
+    bf = load(path).without_errors()
+    if "regex" in series:
+        bf = bf.filter_name(series["regex"])
+    xs, ys = bf.xy(series.get("xfield", "name"),
+                   series.get("yfield", "real_time"))
+    xscale = float(series.get("xscale", 1.0))
+    yscale = float(series.get("yscale", 1.0))
+    xs = [x * xscale if isinstance(x, (int, float)) else x for x in xs]
+    ys = [y * yscale for y in ys]
+    # error bars: stddev aggregates with matching run_name, if present
+    errs: List[float] = []
+    agg = {r.get("run_name"): r for r in load(path).records
+           if r.get("aggregate_name") == "stddev"}
+    if agg:
+        for r in bf.records:
+            a = agg.get(r.get("run_name"))
+            errs.append(float(a.real_time or 0.0) * yscale if a else 0.0)
+    return xs, ys, errs
+
+
+def render_spec(spec: Dict[str, Any], output: Optional[str] = None,
+                base_dir: str = ".") -> str:
+    ptype = spec.get("type", "line")
+    fig, ax = plt.subplots(figsize=spec.get("figsize", (7, 4.5)))
+    n_series = len(spec["series"])
+    width = 0.8 / max(n_series, 1)
+
+    for i, series in enumerate(spec["series"]):
+        xs, ys, errs = _series_xy(series, base_dir)
+        label = series.get("label", f"series{i}")
+        if ptype == "bar":
+            pos = np.arange(len(xs)) + i * width
+            ax.bar(pos, ys, width=width, label=label,
+                   yerr=errs if any(errs) else None, capsize=3)
+            if i == 0:
+                ax.set_xticks(np.arange(len(xs)) + 0.4 - width / 2)
+                ax.set_xticklabels([str(x) for x in xs], rotation=30,
+                                   ha="right", fontsize=8)
+        elif ptype == "regression":
+            xf = np.asarray(xs, dtype=float)
+            yf = np.asarray(ys, dtype=float)
+            ax.errorbar(xf, yf, yerr=errs if any(errs) else None, fmt="o",
+                        label=label, capsize=3)
+            if len(xf) >= 2:
+                slope, icept = np.polyfit(xf, yf, 1)
+                grid = np.linspace(xf.min(), xf.max(), 64)
+                ax.plot(grid, slope * grid + icept, "--",
+                        label=f"{label} fit ({slope:.3g}x+{icept:.3g})")
+        else:  # line with error bars
+            ax.errorbar(xs, ys, yerr=errs if any(errs) else None,
+                        marker="o", label=label, capsize=3)
+
+    xaxis = spec.get("x_axis", {})
+    yaxis = spec.get("y_axis", {})
+    if xaxis.get("label"):
+        ax.set_xlabel(xaxis["label"])
+    if yaxis.get("label"):
+        ax.set_ylabel(yaxis["label"])
+    if xaxis.get("scale") == "log" and ptype != "bar":
+        ax.set_xscale("log", base=2)
+    if yaxis.get("scale") == "log":
+        ax.set_yscale("log")
+    if spec.get("title"):
+        ax.set_title(spec["title"])
+    ax.grid(True, alpha=0.3)
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+
+    out = output or spec.get("output", "scope_plot.png")
+    if not os.path.isabs(out):
+        out = os.path.join(base_dir, out)
+    fig.savefig(out, dpi=spec.get("dpi", 120))
+    plt.close(fig)
+    return out
+
+
+def quick_bar(json_path: str, x: str, y: str, title: str = "",
+              output: str = "bar.png", regex: str = ".*") -> str:
+    """Paper §V-A.3 (bar): one-shot bar plot without a spec file."""
+    spec = {
+        "title": title or os.path.basename(json_path),
+        "type": "bar",
+        "output": output,
+        "x_axis": {"label": x},
+        "y_axis": {"label": y},
+        "series": [{"label": y, "input_file": json_path, "regex": regex,
+                    "xfield": x, "yfield": y}],
+    }
+    return render_spec(spec)

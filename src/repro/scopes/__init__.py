@@ -1,0 +1,5 @@
+"""Benchmark scopes — paper §IV (Table IV analogue).
+
+Each subpackage is an isolated benchmark group exporting ``SCOPE``.
+Scopes never import each other; shared utilities come from ``repro.core``.
+"""

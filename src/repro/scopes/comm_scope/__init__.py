@@ -1,0 +1,93 @@
+"""Comm|Scope — CPU-GPU/NVLink communication → mesh collectives over ICI.
+
+Two measurement modes, mirroring the SCOPE philosophy of measuring the
+same axis at different abstraction levels:
+
+  * measured — run the collective on whatever local device mesh exists
+    (1 device here → intra-chip copy baseline; the multi-device path is
+    exercised by tests/test_comm_scope_multidev.py in a subprocess with 8
+    host devices);
+  * modeled  — analytic v5e ICI cost for the production meshes
+    (ring all-reduce 2(n-1)/n, all-gather (n-1)/n, all-to-all (n-1)/n²)
+    so the numbers feeding §Roofline are explicit and testable.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Scope, State, benchmark, sync
+from repro.core.registry import BenchmarkRegistry
+from repro.core.sysinfo import TPU_V5E
+
+NAME = "comm"
+
+
+def modeled_collective_seconds(kind: str, nbytes: int, axis_size: int,
+                               link_bw: float = None) -> float:
+    """Analytic ring-collective time on one ICI axis (v5e)."""
+    bw = link_bw or TPU_V5E["ici_link_bandwidth"]
+    n = axis_size
+    if n <= 1:
+        return 0.0
+    factor = {"all_reduce": 2.0 * (n - 1) / n,
+              "all_gather": (n - 1) / n,
+              "reduce_scatter": (n - 1) / n,
+              "all_to_all": (n - 1) / (n * n),
+              "ppermute": 1.0}[kind]
+    # bidirectional ring: 2 links usable per axis
+    return factor * nbytes / (2 * bw)
+
+
+def _register(registry: BenchmarkRegistry) -> None:
+    def run_psum(state: State, nbytes: int):
+        n = jax.device_count()
+        elems = nbytes // 4
+        mesh = jax.make_mesh((n,), ("x",))
+        x = jnp.ones((n, elems), jnp.float32)
+
+        @jax.jit
+        def f(x):
+            return jax.shard_map(lambda v: jax.lax.psum(v, "x"), mesh=mesh,
+                                 in_specs=jax.sharding.PartitionSpec("x"),
+                                 out_specs=jax.sharding.PartitionSpec())(x)
+        sync(f(x))
+        while state.keep_running():
+            sync(f(x))
+        state.set_bytes_processed(nbytes)
+        state.counters["devices"] = n
+
+    @benchmark(scope=NAME, registry=registry)
+    def all_reduce_measured(state: State):
+        """psum over the local device mesh (1 device → copy baseline)."""
+        run_psum(state, state.range(0))
+    all_reduce_measured.range_multiplier_args(1 << 16, 1 << 22, mult=8)
+    all_reduce_measured.set_arg_names(["bytes"])
+
+    def modeled(state: State, kind: str):
+        nbytes = state.range(0)
+        axis = state.range(1)
+        t = modeled_collective_seconds(kind, nbytes, axis)
+        state.set_iteration_time(t)
+        while state.keep_running():
+            state.set_iteration_time(t)
+        state.counters["modeled_s"] = t
+        state.counters["axis_size"] = axis
+        state.set_bytes_processed(nbytes)
+
+    for kind in ("all_reduce", "all_gather", "reduce_scatter", "all_to_all"):
+        def make(kind=kind):
+            def bench(state: State):
+                modeled(state, kind)
+            bench.__name__ = f"{kind}_modeled_v5e"
+            bench.__doc__ = (f"Analytic v5e ICI {kind} over one mesh axis "
+                             "(feeds the §Roofline collective term).")
+            return bench
+        b = benchmark(scope=NAME, registry=registry)(make())
+        b.args_product([[1 << 20, 1 << 24, 1 << 28], [16, 256]])
+        b.set_arg_names(["bytes", "axis"])
+        b.manual_time().set_iterations(1)
+
+
+SCOPE = Scope(name=NAME, version="1.0.0",
+              description="Interconnect collectives: measured + v5e model",
+              register=_register)

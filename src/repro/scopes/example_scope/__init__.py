@@ -1,0 +1,71 @@
+"""Example|Scope — the template scope (paper §IV-C).
+
+Demonstrates every required or suggested structure for a new scope:
+
+  1. a ``SCOPE`` export (the CMakeLists.txt/object-library analogue) —
+     *required*;
+  2. benchmark bodies registered through the core benchmark library —
+     *required*;
+  3. two new command-line flags (``--example.exit_code`` and
+     ``--example.greet``), declared clara::Opts-style — *optional*;
+  4. an init hook that makes the binary exit during initialization when
+     ``--example.exit_code`` is given (exactly what the paper's
+     Example|Scope does) — *optional*;
+  5. per-benchmark documentation in docstrings — *optional*.
+"""
+from repro.core import FLAGS, Scope, State, benchmark
+from repro.core.flags import FlagRegistry
+from repro.core.registry import BenchmarkRegistry
+
+import numpy as np
+
+NAME = "example"
+
+
+def _declare_flags(flags: FlagRegistry) -> None:
+    flags.declare(f"{NAME}/exit_code", owner=NAME, type=int, default=None,
+                  help="exit immediately with this status (demo of init "
+                       "hooks aborting the binary)")
+    flags.declare(f"{NAME}/greet", owner=NAME, default=None,
+                  help="print a greeting during post-parse init")
+
+
+def _post_parse():
+    code = FLAGS.get(f"{NAME}/exit_code")
+    if code is not None:
+        return int(code)
+    greet = FLAGS.get(f"{NAME}/greet")
+    if greet:
+        print(f"example scope says: {greet}")
+    return None
+
+
+def _register(registry: BenchmarkRegistry) -> None:
+    @benchmark(scope=NAME, registry=registry)
+    def noop(state: State):
+        """Measures benchmark-harness overhead: an empty timed body."""
+        while state.keep_running():
+            pass
+
+    @benchmark(scope=NAME, registry=registry)
+    def saxpy(state: State):
+        """Single-precision a*x+y on the host — the classic demo kernel."""
+        n = state.range(0)
+        x = np.ones(n, np.float32)
+        y = np.ones(n, np.float32)
+        while state.keep_running():
+            y = 2.0 * x + y
+        state.set_bytes_processed(3 * 4 * n)
+        state.set_items_processed(n)
+    saxpy.range_multiplier_args(1 << 8, 1 << 16, mult=4)
+    saxpy.set_arg_names(["n"])
+
+
+SCOPE = Scope(
+    name=NAME,
+    version="1.0.0",
+    description="Template scope demonstrating the integration surface.",
+    register=_register,
+    declare_flags=_declare_flags,
+    post_parse=_post_parse,
+)

@@ -1,0 +1,42 @@
+"""Histo|Scope — GPU histogramming (paper Table IV), TPU-adapted.
+
+Compares jnp.bincount (XLA scatter-add) against the Pallas one-hot-matmul
+kernel (repro.kernels.histogram) across input sizes and bin counts.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import Scope, State, benchmark, sync
+from repro.core.registry import BenchmarkRegistry
+
+NAME = "histo"
+
+
+def _register(registry: BenchmarkRegistry) -> None:
+    @benchmark(scope=NAME, registry=registry)
+    def bincount_xla(state: State):
+        n, bins = state.range(0), state.range(1)
+        x = jax.random.randint(jax.random.PRNGKey(0), (n,), 0, bins)
+        fn = jax.jit(lambda x: jnp.bincount(x, length=bins))
+        sync(fn(x))
+        while state.keep_running():
+            sync(fn(x))
+        state.set_items_processed(n)
+    bincount_xla.args_product([[1 << 16, 1 << 20], [256, 4096]])
+    bincount_xla.set_arg_names(["n", "bins"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def histogram_pallas(state: State):
+        from repro.kernels.histogram import histogram
+        n, bins = state.range(0), state.range(1)
+        x = jax.random.randint(jax.random.PRNGKey(0), (n,), 0, bins)
+        sync(histogram(x, bins, chunk=4096))
+        while state.keep_running():
+            sync(histogram(x, bins, chunk=4096))
+        state.set_items_processed(n)
+    histogram_pallas.args([1 << 16, 256]).set_arg_names(["n", "bins"])
+
+
+SCOPE = Scope(name=NAME, version="1.0.0",
+              description="histogramming: XLA scatter vs Pallas one-hot",
+              register=_register)

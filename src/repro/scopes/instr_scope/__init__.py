@@ -1,0 +1,67 @@
+"""Instr|Scope — instruction/op latencies and throughput.
+
+Elementwise transcendentals, reductions, dtype conversions at fixed array
+size: the per-op cost floor that model-level numbers decompose into.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import Scope, State, benchmark, sync
+from repro.core.registry import BenchmarkRegistry
+
+NAME = "instr"
+
+_OPS = {
+    "exp": jnp.exp,
+    "tanh": jnp.tanh,
+    "rsqrt": jax.lax.rsqrt,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "add": lambda x: x + x,
+    "mul": lambda x: x * x,
+}
+
+
+def _register(registry: BenchmarkRegistry) -> None:
+    for opname, op in _OPS.items():
+        def make(op=op, opname=opname):
+            def bench(state: State):
+                n = state.range(0)
+                x = jnp.linspace(0.1, 1.0, n, dtype=jnp.float32)
+                fn = jax.jit(op)
+                sync(fn(x))
+                while state.keep_running():
+                    sync(fn(x))
+                state.set_items_processed(n)
+                state.set_bytes_processed(8 * n)
+            bench.__name__ = opname
+            bench.__doc__ = f"elementwise {opname} throughput"
+            return bench
+        b = benchmark(scope=NAME, registry=registry)(make())
+        b.args([1 << 20]).set_arg_names(["n"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def reduce_sum(state: State):
+        n = state.range(0)
+        x = jnp.ones((n,), jnp.float32)
+        fn = jax.jit(jnp.sum)
+        sync(fn(x))
+        while state.keep_running():
+            sync(fn(x))
+        state.set_bytes_processed(4 * n)
+    reduce_sum.args([1 << 20]).set_arg_names(["n"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def convert_f32_bf16(state: State):
+        n = state.range(0)
+        x = jnp.ones((n,), jnp.float32)
+        fn = jax.jit(lambda x: x.astype(jnp.bfloat16))
+        sync(fn(x))
+        while state.keep_running():
+            sync(fn(x))
+        state.set_bytes_processed(6 * n)
+    convert_f32_bf16.args([1 << 20]).set_arg_names(["n"])
+
+
+SCOPE = Scope(name=NAME, version="1.0.0",
+              description="per-op latencies/throughput", register=_register)

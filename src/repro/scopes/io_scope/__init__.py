@@ -1,0 +1,60 @@
+"""I/O|Scope — disk I/O operations (paper Table IV): checkpoint +
+data-pipeline throughput of the production substrates."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Scope, State, benchmark
+from repro.core.registry import BenchmarkRegistry
+
+NAME = "io"
+
+
+def _register(registry: BenchmarkRegistry) -> None:
+    @benchmark(scope=NAME, registry=registry)
+    def checkpoint_save(state: State):
+        """Sharded-checkpoint write throughput (repro.checkpoint)."""
+        from repro.checkpoint import save_checkpoint
+        mb = state.range(0)
+        tree = {"w": jnp.ones((mb * 1024 * 256,), jnp.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            i = 0
+            while state.keep_running():
+                save_checkpoint(os.path.join(d, f"ck{i}"), tree, step=i)
+                i += 1
+        state.set_bytes_processed(mb * 1024 * 1024)
+    checkpoint_save.args([4]).args([32]).set_arg_names(["MiB"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def checkpoint_restore(state: State):
+        from repro.checkpoint import load_checkpoint, save_checkpoint
+        mb = state.range(0)
+        tree = {"w": jnp.ones((mb * 1024 * 256,), jnp.float32)}
+        with tempfile.TemporaryDirectory() as d:
+            path = save_checkpoint(os.path.join(d, "ck"), tree, step=0)
+            while state.keep_running():
+                load_checkpoint(path, tree)
+        state.set_bytes_processed(mb * 1024 * 1024)
+    checkpoint_restore.args([4]).args([32]).set_arg_names(["MiB"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def data_pipeline(state: State):
+        """Synthetic-LM pipeline batches/s (repro.data, no prefetch)."""
+        from repro.data import DataConfig, SyntheticLM
+        seq = state.range(0)
+        src = SyntheticLM(DataConfig(vocab_size=32000, seq_len=seq,
+                                     global_batch=8))
+        i = 0
+        while state.keep_running():
+            src.batch(i)
+            i += 1
+        state.set_items_processed(8 * seq)
+    data_pipeline.args([512]).args([2048]).set_arg_names(["seq"])
+
+
+SCOPE = Scope(name=NAME, version="1.0.0",
+              description="checkpoint + data-pipeline I/O",
+              register=_register)

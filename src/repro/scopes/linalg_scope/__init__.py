@@ -1,0 +1,48 @@
+"""LinAlg|Scope — linear-algebra operations (paper Table IV)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import Scope, State, benchmark, sync
+from repro.core.registry import BenchmarkRegistry
+
+NAME = "linalg"
+
+
+def _register(registry: BenchmarkRegistry) -> None:
+    @benchmark(scope=NAME, registry=registry)
+    def batched_matmul(state: State):
+        b, n = state.range(0), state.range(1)
+        x = jnp.ones((b, n, n), jnp.float32)
+        fn = jax.jit(lambda x: jnp.einsum("bij,bjk->bik", x, x))
+        sync(fn(x))
+        while state.keep_running():
+            sync(fn(x))
+        state.set_items_processed(2 * b * n ** 3)
+    batched_matmul.args_product([[8], [128, 256]])
+    batched_matmul.set_arg_names(["b", "n"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def cholesky(state: State):
+        n = state.range(0)
+        a = jnp.eye(n) * 4.0 + 0.1
+        fn = jax.jit(jnp.linalg.cholesky)
+        sync(fn(a))
+        while state.keep_running():
+            sync(fn(a))
+    cholesky.args([256]).args([512]).set_arg_names(["n"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def triangular_solve(state: State):
+        n = state.range(0)
+        a = jnp.eye(n) + jnp.tril(jnp.ones((n, n)) * 0.01)
+        b = jnp.ones((n, 16))
+        fn = jax.jit(lambda a, b: jax.scipy.linalg.solve_triangular(
+            a, b, lower=True))
+        sync(fn(a, b))
+        while state.keep_running():
+            sync(fn(a, b))
+    triangular_solve.args([256]).set_arg_names(["n"])
+
+
+SCOPE = Scope(name=NAME, version="1.0.0",
+              description="linear algebra operations", register=_register)

@@ -1,0 +1,81 @@
+"""Model|Scope — end-to-end characterization of the 10 assigned archs.
+
+Two measurement modes:
+  * measured — train/decode step wall time of REDUCED configs on the local
+    device (framework-overhead + relative comparisons);
+  * modeled  — the dry-run roofline records (results/dryrun/*.json) are
+    surfaced as benchmark records, making §Roofline data flow through the
+    same uniform JSON/ScopePlot pipeline as every other measurement —
+    SCOPE's "one format for every abstraction level" applied to static
+    analysis.
+"""
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FLAGS, Scope, State, benchmark, sync
+from repro.core.registry import BenchmarkRegistry
+
+NAME = "model"
+_SMOKE_ARCHS = ["llama3.2-1b", "mamba2-780m", "deepseek-moe-16b",
+                "jamba-v0.1-52b", "whisper-small"]
+
+
+def _declare_flags(flags):
+    flags.declare(f"{NAME}/dryrun_dir", owner=NAME, default="results/dryrun",
+                  help="directory of dry-run cell JSONs to surface")
+
+
+def _register(registry: BenchmarkRegistry) -> None:
+    from repro.models import build, get_config
+
+    for arch in _SMOKE_ARCHS:
+        def make(arch=arch):
+            def bench(state: State):
+                cfg = get_config(arch).reduced()
+                api = build(cfg)
+                params = api.init(jax.random.PRNGKey(0))
+                batch = {"tokens": jnp.ones((2, 64), jnp.int32)}
+                if cfg.family in ("audio", "encdec"):
+                    batch["frames"] = jnp.ones((2, cfg.enc_seq, cfg.d_model),
+                                               jnp.float32)
+                fn = jax.jit(lambda p, b: api.loss(p, b)[0])
+                sync(fn(params, batch))
+                while state.keep_running():
+                    sync(fn(params, batch))
+                state.set_items_processed(2 * 64)
+            bench.__name__ = f"loss_step_reduced_{arch.replace('-', '_').replace('.', '_')}"
+            bench.__doc__ = f"reduced-config loss step: {arch}"
+            return bench
+        benchmark(scope=NAME, registry=registry)(make())
+
+    @benchmark(scope=NAME, registry=registry)
+    def dryrun_rooflines(state: State):
+        """Surface dry-run roofline terms as counters (modeled, 1 iter)."""
+        d = FLAGS.get(f"{NAME}/dryrun_dir", "results/dryrun")
+        files = sorted(glob.glob(os.path.join(d, "*.json")))
+        if not files:
+            state.skip_with_message(f"no dry-run results under {d}")
+            return
+        n = 0
+        bound = 0.0
+        while state.keep_running():
+            for f in files:
+                rec = json.load(open(f))
+                if rec.get("status") != "ok":
+                    continue
+                r = rec["roofline"]
+                n += 1
+                bound += max(r["compute_s"], r["memory_s"],
+                             r["collective_s"])
+        state.counters["cells"] = n
+        state.counters["sum_bound_s"] = bound
+    dryrun_rooflines.set_iterations(1)
+
+
+SCOPE = Scope(name=NAME, version="1.0.0",
+              description="end-to-end arch characterization + rooflines",
+              register=_register, declare_flags=_declare_flags)

@@ -1,0 +1,63 @@
+"""MXU|Scope — the TCU|Scope analogue (paper Table IV: "Nvidia GPU tensor
+cores" → TPU MXU systolic array).
+
+Benchmarks the matrix unit through three paths at each size/dtype:
+  * xla    — jnp.dot as XLA emits it (the production path);
+  * pallas — our explicitly-tiled kernel (repro.kernels.matmul), interpret
+             mode on CPU, native on TPU;
+and reports achieved FLOP/s plus (for the TPU target) the modeled roofline
+fraction at v5e peak.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Scope, State, benchmark, sync
+from repro.core.registry import BenchmarkRegistry
+from repro.core.sysinfo import TPU_V5E
+
+NAME = "mxu"
+
+
+def _register(registry: BenchmarkRegistry) -> None:
+    def run_matmul(state: State, fn, dtype):
+        n = state.range(0)
+        x = jnp.ones((n, n), dtype)
+        y = jnp.ones((n, n), dtype)
+        sync(fn(x, y))                       # compile + warm
+        while state.keep_running():
+            sync(fn(x, y))
+        flops = 2.0 * n * n * n
+        state.counters["flops_per_call"] = flops
+        state.counters["model_roofline_s"] = flops / TPU_V5E["peak_bf16_flops"]
+        state.set_items_processed(int(flops))
+
+    @benchmark(scope=NAME, registry=registry)
+    def matmul_xla_f32(state: State):
+        """Square f32 matmul via jnp.dot (XLA path)."""
+        run_matmul(state, jax.jit(jnp.dot), jnp.float32)
+    matmul_xla_f32.range_multiplier_args(256, 1024, mult=2)
+    matmul_xla_f32.set_arg_names(["n"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def matmul_xla_bf16(state: State):
+        """Square bf16 matmul via jnp.dot — the MXU-native dtype."""
+        run_matmul(state, jax.jit(jnp.dot), jnp.bfloat16)
+    matmul_xla_bf16.range_multiplier_args(256, 1024, mult=2)
+    matmul_xla_bf16.set_arg_names(["n"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def matmul_pallas(state: State):
+        """Tiled Pallas kernel (interpret-mode on CPU: correctness timing,
+        not TPU performance — the BlockSpec tiling is the artifact)."""
+        from repro.kernels.matmul import matmul
+        n = state.range(0)
+        run_matmul(state, lambda x, y: matmul(x, y, bm=min(256, n),
+                                              bn=min(256, n),
+                                              bk=min(256, n)), jnp.float32)
+    matmul_pallas.args([256]).set_arg_names(["n"])
+
+
+SCOPE = Scope(name=NAME, version="1.0.0",
+              description="MXU/tensor-core matmul characterization",
+              register=_register)

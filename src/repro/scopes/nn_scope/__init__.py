@@ -1,0 +1,112 @@
+"""NN|Scope — the cuDNN|Scope analogue: neural-network op hot-spots.
+
+Layer-level bodies straight from the production model code: flash
+attention (XLA custom-VJP formulation), RMSNorm (XLA vs Pallas), MoE
+dispatch (scatter path), and the Mamba2 SSD chunk scan.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import Scope, State, benchmark, sync
+from repro.core.registry import BenchmarkRegistry
+
+NAME = "nn"
+
+
+def _register(registry: BenchmarkRegistry) -> None:
+    from repro.models import layers as L
+
+    @benchmark(scope=NAME, registry=registry)
+    def flash_attention_fwd(state: State):
+        """Causal flash attention forward (B=2, H=4, D=64) vs seq len."""
+        S = state.range(0)
+        q = jnp.ones((2, S, 4, 64), jnp.float32)
+        k = jnp.ones((2, S, 2, 64), jnp.float32)
+        v = jnp.ones((2, S, 2, 64), jnp.float32)
+        fn = jax.jit(lambda q, k, v: L.flash_attention_xla(
+            q, k, v, causal=True, chunk_q=128, chunk_k=128))
+        sync(fn(q, k, v))
+        while state.keep_running():
+            sync(fn(q, k, v))
+        state.counters["attn_flops"] = 4.0 * 2 * 4 * S * S * 64 / 2
+    flash_attention_fwd.args([256]).args([512]).args([1024])
+    flash_attention_fwd.set_arg_names(["seq"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def flash_attention_bwd(state: State):
+        """Flash attention fwd+bwd through the custom VJP."""
+        S = state.range(0)
+        q = jnp.ones((2, S, 4, 64), jnp.float32)
+        k = jnp.ones((2, S, 2, 64), jnp.float32)
+        v = jnp.ones((2, S, 2, 64), jnp.float32)
+        fn = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
+            L.flash_attention_xla(q, k, v, chunk_q=128, chunk_k=128) ** 2),
+            argnums=(0, 1, 2)))
+        sync(fn(q, k, v))
+        while state.keep_running():
+            sync(fn(q, k, v))
+    flash_attention_bwd.args([256]).args([512]).set_arg_names(["seq"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def rmsnorm_xla(state: State):
+        n, d = state.range(0), state.range(1)
+        x = jnp.ones((n, d), jnp.float32)
+        p = {"scale": jnp.ones((d,), jnp.float32)}
+        fn = jax.jit(lambda x: L.rms_norm(p, x))
+        sync(fn(x))
+        while state.keep_running():
+            sync(fn(x))
+        state.set_bytes_processed(2 * 4 * n * d)
+    rmsnorm_xla.args_product([[4096], [1024, 4096]])
+    rmsnorm_xla.set_arg_names(["rows", "d"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def rmsnorm_pallas(state: State):
+        from repro.kernels.rmsnorm import rmsnorm
+        n, d = state.range(0), state.range(1)
+        x = jnp.ones((n, d), jnp.float32)
+        s = jnp.ones((d,), jnp.float32)
+        sync(rmsnorm(x, s, br=128))
+        while state.keep_running():
+            sync(rmsnorm(x, s, br=128))
+        state.set_bytes_processed(2 * 4 * n * d)
+    rmsnorm_pallas.args([1024, 1024]).set_arg_names(["rows", "d"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def moe_dispatch_scatter(state: State):
+        """Capacity-based MoE (router+dispatch+experts+combine)."""
+        E, k, d, ff = 8, 2, 256, 512
+        T = state.range(0)
+        p = L.init_moe(jax.random.PRNGKey(0), d, E, ff, 0)
+        x = jnp.ones((1, T, d), jnp.float32)
+        fn = jax.jit(lambda x: L.moe_scatter(p, x, top_k=k,
+                                             capacity_factor=1.25)[0])
+        sync(fn(x))
+        while state.keep_running():
+            sync(fn(x))
+        state.set_items_processed(T)
+    moe_dispatch_scatter.args([1024]).args([4096])
+    moe_dispatch_scatter.set_arg_names(["tokens"])
+
+    @benchmark(scope=NAME, registry=registry)
+    def ssd_chunked_scan(state: State):
+        """Mamba2 SSD chunked scan (XLA formulation)."""
+        S = state.range(0)
+        b, h, p_, n = 2, 4, 64, 64
+        x = jnp.ones((b, S, h, p_), jnp.float32) * 0.1
+        dt = jnp.ones((b, S, h), jnp.float32) * 0.1
+        A = -jnp.ones((h,), jnp.float32)
+        Bm = jnp.ones((b, S, 1, n), jnp.float32) * 0.1
+        Cm = jnp.ones((b, S, 1, n), jnp.float32) * 0.1
+        D = jnp.ones((h,), jnp.float32)
+        fn = jax.jit(lambda *a: L.ssd_chunked(*a, chunk=128)[0])
+        sync(fn(x, dt, A, Bm, Cm, D))
+        while state.keep_running():
+            sync(fn(x, dt, A, Bm, Cm, D))
+        state.set_items_processed(b * S)
+    ssd_chunked_scan.args([1024]).args([4096]).set_arg_names(["seq"])
+
+
+SCOPE = Scope(name=NAME, version="1.0.0",
+              description="NN-operation hot-spots (cuDNN|Scope analogue)",
+              register=_register)

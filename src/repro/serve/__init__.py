@@ -1,0 +1,4 @@
+"""repro.serve — batched LM serving on top of the model API."""
+from .engine import ServeConfig, ServeEngine, Request
+
+__all__ = ["ServeConfig", "ServeEngine", "Request"]

@@ -1,0 +1,8 @@
+"""repro.train — optimizer, schedules, train-step factory."""
+from .optimizer import (AdamWConfig, adamw_init, adamw_update,
+                        clip_by_global_norm, warmup_cosine)
+from .step import TrainState, make_init_fn, make_train_step
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "warmup_cosine",
+           "TrainState", "make_init_fn", "make_train_step"]

@@ -1,0 +1,89 @@
+"""Runner: adaptive iterations, aggregates, GB-compatible JSON schema."""
+import json
+import time
+
+from repro.core.benchmark import Benchmark
+from repro.core.registry import BenchmarkRegistry, benchmark
+from repro.core.runner import RunOptions, run_benchmarks, write_json
+
+
+def test_adaptive_iterations_fast_benchmark():
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def fast(state):
+        while state.keep_running():
+            pass
+
+    doc = run_benchmarks(reg.all(), RunOptions(min_time=0.02),
+                         progress=False)
+    rec = doc["benchmarks"][0]
+    assert rec["iterations"] > 100          # calibration kicked in
+    assert rec["time_unit"] == "us"
+
+
+def test_repetitions_and_aggregates():
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def b(state):
+        while state.keep_running():
+            time.sleep(0.001)
+
+    doc = run_benchmarks(reg.all(),
+                         RunOptions(min_time=0.005, repetitions=3),
+                         progress=False)
+    names = [r["name"] for r in doc["benchmarks"]]
+    assert sum(n == "t/b" for n in names) == 3
+    aggs = [r for r in doc["benchmarks"] if r["run_type"] == "aggregate"]
+    assert {a["aggregate_name"] for a in aggs} == {"mean", "median",
+                                                   "stddev"}
+
+
+def test_error_isolation():
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def bad(state):
+        raise RuntimeError("kaboom")
+
+    @benchmark(scope="t", registry=reg)
+    def good(state):
+        while state.keep_running():
+            pass
+
+    doc = run_benchmarks(reg.all(), RunOptions(min_time=0.01),
+                         progress=False)
+    by_name = {r["name"]: r for r in doc["benchmarks"]}
+    assert by_name["t/bad"]["error_occurred"] is True
+    assert "t/good" in by_name and not by_name["t/good"].get(
+        "error_occurred")
+
+
+def test_json_schema_google_benchmark_compatible(tmp_path):
+    """The schema claim from paper §V-A: unmodified GB format."""
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def b(state):
+        while state.keep_running():
+            pass
+        state.set_bytes_processed(1024)
+        state.counters["custom"] = 7.0
+
+    doc = run_benchmarks(reg.all(), RunOptions(min_time=0.01),
+                         progress=False)
+    p = tmp_path / "out.json"
+    write_json(doc, str(p))
+    loaded = json.loads(p.read_text())
+    assert set(loaded) == {"context", "benchmarks"}
+    ctx = loaded["context"]
+    for key in ("date", "host_name", "num_cpus"):   # GB context fields
+        assert key in ctx
+    rec = loaded["benchmarks"][0]
+    for key in ("name", "run_name", "run_type", "iterations", "real_time",
+                "cpu_time", "time_unit", "repetitions",
+                "repetition_index", "threads"):
+        assert key in rec, key
+    assert rec["custom"] == 7.0              # counters inlined (GB style)
+    assert rec["bytes_per_second"] > 0

@@ -1,0 +1,81 @@
+"""Scope plugin system: isolation, enable/disable, flags, hooks."""
+from repro.core.flags import FlagRegistry
+from repro.core.hooks import HookChain
+from repro.core.registry import BenchmarkRegistry
+from repro.core.scope import Scope, ScopeManager
+
+
+def make_mgr():
+    return ScopeManager(registry=BenchmarkRegistry(),
+                        flags=FlagRegistry(), hooks=HookChain())
+
+
+def test_import_failure_is_isolated():
+    mgr = make_mgr()
+    mgr.load(["repro.scopes.example_scope", "no.such.module"])
+    status = mgr.status()
+    assert status["example"] == "enabled"
+    assert status["module"] == "unavailable"
+    mgr.register_all()
+    assert len(mgr.registry) > 0           # example still registered
+
+
+def test_enable_disable():
+    mgr = make_mgr()
+    a = Scope(name="a", register=lambda reg: reg.register(
+        __import__("repro.core.benchmark", fromlist=["Benchmark"])
+        .Benchmark("a/x", lambda s: None, scope="a")))
+    b = Scope(name="b", register=lambda reg: reg.register(
+        __import__("repro.core.benchmark", fromlist=["Benchmark"])
+        .Benchmark("b/y", lambda s: None, scope="b")))
+    mgr.add_scope(a)
+    mgr.add_scope(b)
+    mgr.configure(disable=["b"])
+    mgr.register_all()
+    assert [x.name for x in mgr.registry.all()] == ["a/x"]
+
+
+def test_enable_only():
+    mgr = make_mgr()
+    for n in "ab":
+        mgr.add_scope(Scope(name=n))
+    mgr.configure(enable=["b"])
+    assert mgr.status() == {"a": "disabled", "b": "enabled"}
+
+
+def test_flags_and_hooks_two_phase():
+    calls = []
+    flags = FlagRegistry()
+    hooks = HookChain()
+    mgr = ScopeManager(registry=BenchmarkRegistry(), flags=flags,
+                       hooks=hooks)
+    scope = Scope(
+        name="s",
+        declare_flags=lambda f: f.declare("s/knob", owner="s", type=int,
+                                          default=3),
+        pre_parse=lambda: calls.append("pre") or None,
+        post_parse=lambda: calls.append("post") or None,
+    )
+    mgr.add_scope(scope)
+    assert hooks.run_pre_parse() is None
+    flags.parse(["--s.knob", "9"])
+    assert hooks.run_post_parse() is None
+    assert calls == ["pre", "post"]
+    assert flags.get("s/knob") == 9
+
+
+def test_hook_exit_code_aborts():
+    hooks = HookChain()
+    hooks.register_post_parse(lambda: 3, owner="s")
+    assert hooks.run_post_parse() == 3
+
+
+def test_example_scope_exit_flag_end_to_end():
+    """Paper §IV-C: Example|Scope exits during init when flag given."""
+    import subprocess
+    import sys
+    r = subprocess.run(
+        [sys.executable, "-m", "repro", "--example.exit_code", "7"],
+        capture_output=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                  "HOME": "/root"}, cwd=".")
+    assert r.returncode == 7

@@ -1,0 +1,52 @@
+"""launch.inputs: shapes registry, applicability, struct correctness."""
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import inputs as inp
+from repro.models import get_config, list_archs
+
+
+def test_shapes_registry_matches_brief():
+    assert inp.SHAPES["train_4k"].seq_len == 4096
+    assert inp.SHAPES["train_4k"].global_batch == 256
+    assert inp.SHAPES["prefill_32k"].global_batch == 32
+    assert inp.SHAPES["decode_32k"].global_batch == 128
+    assert inp.SHAPES["long_500k"].seq_len == 524288
+    assert inp.SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_500k_applicability_per_brief():
+    runs = [a for a in list_archs()
+            if inp.shape_applicable(get_config(a), "long_500k")[0]]
+    assert sorted(runs) == ["jamba-v0.1-52b", "mamba2-780m"]
+
+
+@pytest.mark.parametrize("arch", list(list_archs()))
+def test_input_structs_cover_model_inputs(arch):
+    cfg = get_config(arch)
+    s = inp.input_specs(cfg, "train_4k")
+    assert s["tokens"].shape == (256, 4096)
+    assert s["tokens"].dtype == jnp.int32
+    if cfg.family == "vlm":
+        assert "vision_embeds" in s and "positions" in s
+        assert s["positions"].shape == (3, 256, 4096)
+    if cfg.family in ("audio", "encdec"):
+        assert s["frames"].shape == (256, cfg.enc_seq, cfg.d_model)
+    d = inp.input_specs(cfg, "decode_32k")
+    assert d["tokens"].shape == (128, 1)
+
+
+def test_cache_structs_no_allocation(monkeypatch):
+    cfg = get_config("llama3.2-1b")
+    structs = inp.cache_structs(cfg, "decode_32k")
+    assert structs["k"].shape == (16, 128, 32768, 8, 64)
+    # ShapeDtypeStructs, not arrays
+    assert not hasattr(structs["k"], "devices")
+
+
+def test_concrete_batch_smoke():
+    cfg = get_config("qwen2-vl-2b").reduced()
+    b = inp.concrete_batch(cfg, "train_4k", batch_override=2,
+                           seq_override=16)
+    assert b["tokens"].shape == (2, 16)
+    assert b["positions"].shape == (3, 2, 16)

@@ -1,0 +1,92 @@
+"""Per-arch smoke tests (reduced configs) + serving-consistency checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import build, get_config, list_archs
+from repro.models import layers as L
+
+ARCHS = list(list_archs())
+
+
+def make_batch(cfg, B=2, S=32, key=jax.random.PRNGKey(7)):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            key, (B, S, cfg.d_model)) * 0.02
+        batch["vision_mask"] = jnp.zeros((B, S), bool).at[:, :4].set(True)
+    if cfg.family in ("audio", "encdec"):
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.enc_seq, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_loss(arch):
+    """Assigned-arch smoke: reduced config, one loss step, shapes+finite."""
+    cfg = get_config(arch).reduced()
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(api.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    logits, _ = jax.jit(api.logits)(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen3-1.7b",
+                                  "deepseek-moe-16b", "mamba2-780m",
+                                  "jamba-v0.1-52b", "whisper-small",
+                                  "qwen2-vl-2b"])
+def test_decode_matches_teacher_forcing(arch):
+    """prefill+decode must reproduce the teacher-forced logits."""
+    cfg = get_config(arch).reduced().override(moe_capacity_factor=8.0)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(1))
+    B, S = 2, 24
+    batch = make_batch(cfg, B, S, jax.random.PRNGKey(2))
+    full, _ = jax.jit(api.logits)(params, batch)
+    pre = {k: (v[:, :S - 1] if v.ndim >= 2 and v.shape[1] == S else v)
+           for k, v in batch.items()}
+    cache = api.init_cache(B, S + 4)
+    lp, cache = jax.jit(api.prefill)(params, pre, cache)
+    ld, cache = jax.jit(api.decode_step)(
+        params, batch["tokens"][:, S - 1:S], cache)
+    np.testing.assert_allclose(np.asarray(lp[:, 0], np.float32),
+                               np.asarray(full[:, S - 2], np.float32),
+                               atol=5e-2, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(ld[:, 0], np.float32),
+                               np.asarray(full[:, S - 1], np.float32),
+                               atol=5e-2, rtol=1e-2)
+
+
+def test_mrope_collapses_to_rope_for_text():
+    """qwen2-vl M-RoPE with equal t/h/w positions == standard RoPE."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 32))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+    a = L.apply_rope(x, pos, 10000.0)
+    b = L.apply_rope(x, pos3, 10000.0, mrope_sections=(6, 5, 5))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_param_counts_match_known_sizes():
+    expect = {"llama3.2-1b": 1.24e9, "mamba2-780m": 0.78e9,
+              "stablelm-12b": 12.1e9, "jamba-v0.1-52b": 51.5e9,
+              "deepseek-moe-16b": 16.9e9, "whisper-small": 0.24e9}
+    for arch, n in expect.items():
+        got = get_config(arch).num_params()
+        assert abs(got - n) / n < 0.06, (arch, got, n)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("deepseek-moe-16b")
+    assert cfg.num_active_params() < 0.25 * cfg.num_params()
+
+
+def test_config_registry_complete():
+    assert len(ARCHS) == 10
+    fams = {get_config(a).family for a in ARCHS}
+    assert {"dense", "moe", "ssm", "hybrid", "vlm", "audio"} <= fams

@@ -1,0 +1,87 @@
+"""Partition rules: divisibility invariants over all archs (property)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.distributed import partition as part
+from repro.models import build, get_config, list_archs
+
+
+class FakeMesh:
+    """Mesh stand-in exposing .shape only (rules never touch devices)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+
+
+MESHES = [FakeMesh({"data": 16, "model": 16}),
+          FakeMesh({"pod": 2, "data": 16, "model": 16}),
+          FakeMesh({"data": 2, "model": 4})]
+
+
+@pytest.mark.parametrize("arch", list(list_archs()))
+@pytest.mark.parametrize("mesh", MESHES, ids=["16x16", "2x16x16", "2x4"])
+def test_param_specs_divisible(arch, mesh):
+    """Every sharded dim must divide by its mesh axes — the invariant that
+    makes every config lower on the production mesh."""
+    cfg = get_config(arch)
+    api = build(cfg)
+    structs = jax.eval_shape(api.init, jax.ShapeDtypeStruct((2,),
+                                                            jnp.uint32))
+    for specs, label in ((part.param_specs(cfg, structs, mesh), "tp"),
+                         (part.zero_shard_specs(cfg, structs, mesh),
+                          "zero")):
+        leaves, _ = jax.tree_util.tree_flatten(structs)
+        spec_leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: hasattr(x, "index") or x is None
+            or isinstance(x, tuple))
+        spec_leaves = jax.tree_util.tree_leaves(
+            jax.tree_util.tree_map(lambda l, sp: (l, sp), structs, specs,
+                                   is_leaf=lambda x: hasattr(x, "shape")),
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+            and hasattr(x[0], "shape"))
+        for leaf, spec in spec_leaves:
+            shape = tuple(leaf.shape)
+            for dim, entry in enumerate(spec):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                size = 1
+                for a in axes:
+                    size *= mesh.shape[a]
+                assert shape[dim] % size == 0, (label, shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-moe-16b",
+                                  "mamba2-780m"])
+def test_zero_shard_adds_data_axis_somewhere(arch):
+    cfg = get_config(arch)
+    api = build(cfg)
+    mesh = MESHES[0]
+    structs = jax.eval_shape(api.init, jax.ShapeDtypeStruct((2,),
+                                                            jnp.uint32))
+    tp = part.param_specs(cfg, structs, mesh)
+    zero = part.zero_shard_specs(cfg, structs, mesh)
+    n_data = sum("data" in str(s) for s in jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(str, zero)))
+    assert n_data > 0
+
+
+def test_cache_specs_cover_all_leaves():
+    for arch in ("llama3.2-1b", "mamba2-780m", "jamba-v0.1-52b",
+                 "whisper-small"):
+        cfg = get_config(arch)
+        api = build(cfg)
+        cache = jax.eval_shape(lambda a=api: a.init_cache(16, 128))
+        specs = part.cache_specs(cfg, cache, MESHES[0])
+        n_cache = len(jax.tree_util.tree_leaves(cache))
+        n_spec = len(jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: hasattr(x, "index")))
+        assert n_cache == n_spec
+
+
+def test_batch_spec_guards_indivisible():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    cfg = get_config("llama3.2-1b")
+    batch = {"tokens": jax.ShapeDtypeStruct((1, 64), jnp.int32)}
+    specs = part.input_specs_tree(cfg, batch, mesh)
+    assert all(e is None for e in specs["tokens"])

@@ -1,0 +1,119 @@
+"""ScopePlot: object model, cat/filter_name, frames, spec/deps/bar."""
+import json
+
+import pytest
+import yaml
+from hypothesis import given, settings, strategies as st
+
+from repro.scopeplot import BenchmarkFile, Frame, cat, filter_name, loads
+from repro.scopeplot.plot import (load_spec, quick_bar, render_spec,
+                                  spec_dependencies)
+
+DOC = {
+    "context": {"host_name": "h"},
+    "benchmarks": [
+        {"name": "s/a/n:1", "run_name": "s/a/n:1", "run_type": "iteration",
+         "iterations": 10, "real_time": 5.0, "cpu_time": 5.0,
+         "time_unit": "us", "bytes_per_second": 100.0},
+        {"name": "s/a/n:2", "run_name": "s/a/n:2", "run_type": "iteration",
+         "iterations": 10, "real_time": 7.0, "cpu_time": 7.0,
+         "time_unit": "us", "bytes_per_second": 200.0},
+        {"name": "s/b", "run_name": "s/b", "run_type": "iteration",
+         "iterations": 1, "real_time": 9.0, "cpu_time": 9.0,
+         "time_unit": "ms", "error_occurred": True, "error_message": "x"},
+    ],
+}
+
+
+def bf():
+    return BenchmarkFile.from_dict(json.loads(json.dumps(DOC)))
+
+
+def test_filter_name():
+    out = bf().filter_name(r"s/a")
+    assert len(out) == 2
+    assert all("s/a" in r.name for r in out)
+
+
+def test_cat_preserves_structure():
+    """Paper §V-A.4: unlike unix cat, result is valid GB JSON."""
+    merged = cat([bf(), bf()])
+    d = merged.to_dict()
+    assert len(d["benchmarks"]) == 6
+    assert d["context"] == {"host_name": "h"}
+    json.dumps(d)   # serializable
+
+
+def test_without_errors_and_units():
+    clean = bf().without_errors()
+    assert len(clean) == 2
+    assert clean.records[0].real_time_seconds() == pytest.approx(5e-6)
+
+
+def test_args_parsing():
+    r = bf().records[0]
+    assert r.arg("n") == "1"
+    assert r.arg(0) == "n:1"
+
+
+def test_xy_extraction():
+    xs, ys = bf().without_errors().xy("n", "bytes_per_second")
+    assert xs == [1.0, 2.0]
+    assert ys == [100.0, 200.0]
+
+
+def test_to_frame_groupby_sort():
+    f = bf().without_errors().to_frame(["name", "real_time"])
+    assert len(f) == 2 and f.columns == ["name", "real_time"]
+    g = f.with_column("k", ["a", "a"]).groupby("k", {"real_time": sum})
+    assert g["real_time"] == [12.0]
+    s = f.sort_by("real_time", reverse=True)
+    assert s["real_time"] == [7.0, 5.0]
+
+
+@given(st.lists(st.floats(min_value=0, max_value=1e6), min_size=1,
+                max_size=20))
+@settings(max_examples=25, deadline=None)
+def test_frame_roundtrip_csv(vals):
+    f = Frame({"v": vals})
+    text = f.to_csv()
+    rows = text.strip().splitlines()
+    assert rows[0] == "v" and len(rows) == len(vals) + 1
+
+
+def test_spec_render_and_deps(tmp_path):
+    src = tmp_path / "r.json"
+    src.write_text(json.dumps(DOC))
+    spec = {
+        "title": "t", "type": "line",
+        "output": str(tmp_path / "out.png"),
+        "series": [{"label": "a", "input_file": str(src),
+                    "regex": "s/a", "xfield": "n",
+                    "yfield": "bytes_per_second"}],
+    }
+    sp = tmp_path / "spec.yaml"
+    sp.write_text(yaml.safe_dump(spec))
+    loaded = load_spec(str(sp))
+    assert spec_dependencies(loaded) == [str(src)]
+    out = render_spec(loaded)
+    assert (tmp_path / "out.png").exists()
+
+
+def test_bar_subcommand(tmp_path):
+    src = tmp_path / "r.json"
+    src.write_text(json.dumps(DOC))
+    out = quick_bar(str(src), "n", "real_time",
+                    output=str(tmp_path / "bar.png"))
+    assert (tmp_path / "bar.png").exists()
+
+
+def test_cli_cat_filter(tmp_path, capsys):
+    from repro.scopeplot.__main__ import main
+    src = tmp_path / "r.json"
+    src.write_text(json.dumps(DOC))
+    assert main(["filter_name", str(src), "s/a"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert len(out["benchmarks"]) == 2
+    assert main(["cat", str(src), str(src)]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert len(out["benchmarks"]) == 6

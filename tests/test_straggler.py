@@ -1,0 +1,36 @@
+"""Straggler watchdog + data reassignment."""
+import numpy as np
+
+from repro.distributed.straggler import (DataReassigner, StragglerConfig,
+                                         StragglerWatchdog)
+
+
+def test_detects_persistent_straggler():
+    wd = StragglerWatchdog(4, StragglerConfig(threshold=1.5, patience=3))
+    flagged = []
+    for _ in range(10):
+        times = np.asarray([1.0, 1.0, 1.0, 3.0])
+        flagged += wd.record_step(times)
+    assert flagged == [3]
+    assert wd.flagged == [3]
+
+
+def test_transient_spike_not_flagged():
+    wd = StragglerWatchdog(4, StragglerConfig(threshold=1.5, patience=3))
+    for i in range(10):
+        times = np.asarray([1.0, 1.0, 1.0, 4.0 if i == 5 else 1.0])
+        assert wd.record_step(times) == []
+
+
+def test_reassigner_offsets_complete_and_monotonic():
+    ra = DataReassigner(global_batch=64, num_hosts=4)
+    ra.derate(2, 0.5)
+    off = ra.offsets()
+    assert off[0] == 0 and off[-1] == 64
+    assert all(off[i] <= off[i + 1] for i in range(len(off) - 1))
+    sizes = np.diff(off)
+    assert sizes[2] < sizes[0]            # derated host gets less work
+    # slices cover the batch exactly once
+    covered = sum((ra.slice_for(h).stop - ra.slice_for(h).start)
+                  for h in range(4))
+    assert covered == 64
