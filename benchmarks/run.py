@@ -1,9 +1,10 @@
 """Benchmark harness — one section per paper table/figure.
 
   * Table IV (the scopes): every completed scope runs through the core
-    runner; each benchmark instance prints ``name,us_per_call,derived``
-    where ``derived`` is the scope's natural rate (GB/s, Mitems/s, modeled
-    seconds, ...);
+    run orchestrator (repro.core.orchestrate) — failure-isolated, and
+    parallel across scopes when ``BENCH_JOBS>1``; each benchmark instance
+    prints ``name,us_per_call,derived`` where ``derived`` is the scope's
+    natural rate (GB/s, Mitems/s, modeled seconds, ...);
   * Figure 3 (ScopePlot line plot): regenerates the example saxpy plot
     from live results via the scopeplot spec pipeline;
   * §Roofline feed: the model scope surfaces the dry-run cells when
@@ -11,6 +12,9 @@
 
 Wall-clock numbers are CPU wall-clock on this container (framework
 overhead + relative comparisons); TPU numbers are the modeled columns.
+
+Env knobs: ``BENCH_JOBS`` (worker parallelism, default 1 → inline),
+``BENCH_RESULTS_DIR`` (persist per-scope shards + merged.json).
 """
 import os
 
@@ -29,26 +33,48 @@ def _derived(rec) -> str:
     return ""
 
 
-def run_scope(scope: str, min_time: float = 0.02):
-    from repro.core import REGISTRY, RunOptions, run_benchmarks
-    from repro.core.scope import ScopeManager
+def _print_shard(shard) -> None:
     from repro.scopeplot import BenchmarkFile
-
-    REGISTRY.reset()
-    mgr = ScopeManager()
-    mgr.load([f"repro.scopes.{scope}_scope"])
-    mgr.register_all()
-    benches = REGISTRY.filter(".*", scopes=[scope])
-    doc = run_benchmarks(benches, RunOptions(min_time=min_time),
-                         progress=False)
-    bf = BenchmarkFile.from_dict(doc)
+    if shard.status != "ok" or shard.doc is None:
+        first = shard.error.strip().splitlines()[-1] if shard.error else \
+            shard.status
+        print(f"{shard.scope}/SCOPE_FAILED,0.00,{first}")
+        return
+    bf = BenchmarkFile.from_dict(shard.doc)
     for rec in bf.without_errors():
         if rec.raw.get("run_type") == "aggregate":
             continue
         us = rec.real_time_seconds()
         us = us * 1e6 if us is not None else float("nan")
         print(f"{rec.name},{us:.2f},{_derived(rec)}")
-    return doc
+
+
+def run_all(min_time: float = 0.02):
+    """Run every scope through the orchestrator.
+
+    Returns (RunResult, unavailable) where ``unavailable`` maps scopes
+    that failed to import/register to their tracebacks — the orchestrator
+    never schedules those, but the harness must still report them.
+    """
+    from repro.core import REGISTRY, RunOptions
+    from repro.core.orchestrate import OrchestratorOptions, execute
+    from repro.core.scope import ScopeManager
+
+    jobs = int(os.environ.get("BENCH_JOBS", "1"))
+    REGISTRY.reset()
+    mgr = ScopeManager()
+    mgr.load([f"repro.scopes.{s}_scope" for s in SCOPES])
+    mgr.register_all()
+    opts = OrchestratorOptions(
+        jobs=jobs,
+        run=RunOptions(min_time=min_time),
+        results_dir=os.environ.get("BENCH_RESULTS_DIR"),
+    )
+    result = execute(mgr, REGISTRY, opts,
+                     context_extra={"scopes": mgr.status()})
+    unavailable = {s.scope.name: s.error for s in mgr.scopes()
+                   if not s.available}
+    return result, unavailable
 
 
 def figure3_plot(docs) -> None:
@@ -79,12 +105,18 @@ def figure3_plot(docs) -> None:
 
 
 def main() -> None:
+    result, unavailable = run_all()
     docs = {}
     for scope in SCOPES:
-        try:
-            docs[scope] = run_scope(scope)
-        except Exception as e:  # noqa: BLE001 - isolate scope failures
-            print(f"{scope}/SCOPE_FAILED,0.00,{type(e).__name__}:{e}")
+        shard = result.shard(scope)
+        if shard is None:
+            err = unavailable.get(scope, "not scheduled")
+            last = err.strip().splitlines()[-1] if err else "not scheduled"
+            print(f"{scope}/SCOPE_FAILED,0.00,{last}")
+            continue
+        _print_shard(shard)
+        if shard.status == "ok":
+            docs[scope] = shard.doc
     figure3_plot(docs)
 
 

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point.
+#
+# Sets the environment the suite expects:
+#   * PYTHONPATH=src             — the repo is not pip-installed;
+#   * 8 virtual host devices     — tests/test_multidevice.py spawns
+#     subprocesses that re-set this themselves, but top-level collection
+#     of any shard_map-using module needs >1 device available too.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+
+exec python -m pytest -x -q "$@"

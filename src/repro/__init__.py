@@ -1,0 +1,18 @@
+"""repro — SCOPE benchmarking framework reproduction.
+
+Process-wide JAX configuration lives here so every entry point (pytest,
+``python -m repro``, orchestrator workers, launch scripts) agrees:
+
+  * ``jax_threefry_partitionable``: without it, the SPMD partitioner
+    changes the bits ``jax.random`` produces when an init computation is
+    jitted with shardings — sharded model init then silently disagrees
+    with single-device init (observed 0.38 max param diff on the 2x4-mesh
+    llama train-step equivalence test).  The partitionable generator is
+    sharding-invariant; newer JAX enables it by default.
+"""
+import jax as _jax
+
+try:
+    _jax.config.update("jax_threefry_partitionable", True)
+except AttributeError:  # removed option on future JAX: already default-on
+    pass

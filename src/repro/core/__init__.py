@@ -22,6 +22,9 @@ from .errorcheck import (ScopeError, check_compiles, check_finite,
 from .flags import FLAGS, FlagRegistry
 from .hooks import HOOKS, HookChain
 from .logging import get_logger
+from .baseline import Comparison, compare_documents, save_baseline
+from .orchestrate import (OrchestratorOptions, RunResult, ScopeShard,
+                          execute, merge_shards)
 from .registry import (REGISTRY, BenchmarkRegistry, benchmark,
                        register_benchmark)
 from .runner import RunOptions, run_benchmarks, write_json
@@ -36,5 +39,7 @@ __all__ = [
     "REGISTRY", "BenchmarkRegistry", "benchmark", "register_benchmark",
     "RunOptions", "run_benchmarks", "write_json",
     "BUILTIN_SCOPES", "Scope", "ScopeManager",
+    "OrchestratorOptions", "RunResult", "ScopeShard", "execute",
+    "merge_shards", "Comparison", "compare_documents", "save_baseline",
     "TPU_V5E", "build_context",
 ]

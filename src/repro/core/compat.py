@@ -1,0 +1,48 @@
+"""Version-tolerant wrappers over moving JAX APIs.
+
+``shard_map`` has lived in three places across JAX releases:
+
+  * ``jax.experimental.shard_map.shard_map(..., check_rep=...)`` (<= 0.4.x)
+  * ``jax.shard_map(..., check_rep=...)`` (0.5.x)
+  * ``jax.shard_map(..., check_vma=...)`` (>= 0.6, keyword renamed)
+
+Model and scope code must not care which JAX the container bakes in, so
+they import :func:`shard_map` from here.  The replication-check keyword is
+normalized to ``check`` and translated to whatever the installed JAX
+spells it.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+
+
+def _resolve_shard_map() -> Callable[..., Any]:
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm  # type: ignore
+    return sm
+
+
+_SHARD_MAP = _resolve_shard_map()
+try:
+    _PARAMS = frozenset(inspect.signature(_SHARD_MAP).parameters)
+except (TypeError, ValueError):  # builtins / C-accelerated: assume modern
+    _PARAMS = frozenset({"check_vma"})
+
+
+def shard_map(f: Callable[..., Any], *, mesh, in_specs, out_specs,
+              check: bool = True) -> Callable[..., Any]:
+    """SPMD-map ``f`` over ``mesh`` — portable across JAX versions.
+
+    ``check`` is the replication/varying-manual-axes check
+    (``check_rep`` on older JAX, ``check_vma`` on newer).
+    """
+    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if "check_vma" in _PARAMS:
+        kwargs["check_vma"] = check
+    elif "check_rep" in _PARAMS:
+        kwargs["check_rep"] = check
+    return _SHARD_MAP(f, **kwargs)

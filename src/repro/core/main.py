@@ -1,5 +1,10 @@
 """The SCOPE binary entry point (paper Fig. 1, ``python -m repro``).
 
+Subcommands::
+
+    python -m repro [run] [flags...]     # run benchmarks (default)
+    python -m repro compare A.json B.json  # diff two result documents
+
 Startup sequence mirrors the paper's run stage:
 
   1. load scopes (download/configure analogue — imports, flag declaration)
@@ -7,7 +12,10 @@ Startup sequence mirrors the paper's run stage:
   3. parse CLI (core flags + every scope's declared flags)
   4. run post-parse init hooks
   5. enable/disable scopes, register their benchmarks
-  6. filter, run, write the Google-Benchmark JSON data file
+  6. filter, then hand the enabled scopes to the run orchestrator
+     (``--jobs N`` parallelizes scopes across failure-isolated workers;
+     see repro.core.orchestrate), write the merged GB-JSON data file
+  7. optionally diff against / store a baseline (repro.core.baseline)
 """
 from __future__ import annotations
 
@@ -16,10 +24,14 @@ import sys
 from typing import List, Optional
 
 from . import logging as scope_logging
+from .baseline import (compare_documents, compare_main, format_comparisons,
+                       gate_failures, load_document, save_baseline,
+                       summarize)
 from .flags import FLAGS
 from .hooks import HOOKS
+from .orchestrate import OrchestratorOptions, execute
 from .registry import REGISTRY
-from .runner import RunOptions, run_benchmarks, write_json
+from .runner import RunOptions, write_json
 from .scope import ScopeManager
 
 log = scope_logging.get_logger("main")
@@ -28,14 +40,39 @@ log = scope_logging.get_logger("main")
 def main(argv: Optional[List[str]] = None,
          scope_modules: Optional[List[str]] = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "compare":
+        return compare_main(argv[1:])
+    if argv and argv[0] == "run":
+        argv = argv[1:]
+    return run_main(argv, scope_modules)
 
-    # Scope selection is core-level (not a scope flag), parse separately.
+
+def run_main(argv: List[str],
+             scope_modules: Optional[List[str]] = None) -> int:
+    # Scope selection + orchestration are core-level (not scope flags),
+    # parsed separately from the FLAGS registry.
     sel = argparse.ArgumentParser(add_help=False)
     sel.add_argument("--enable-scope", action="append", default=None,
                      help="enable ONLY these scopes (repeatable)")
     sel.add_argument("--disable-scope", action="append", default=[],
                      help="disable these scopes (repeatable)")
     sel.add_argument("--list-scopes", action="store_true")
+    sel.add_argument("--jobs", type=int, default=1,
+                     help="run scopes in N parallel isolated workers")
+    sel.add_argument("--isolate", default="auto",
+                     choices=["auto", "inline", "pool", "subprocess"],
+                     help="worker isolation (auto: inline when --jobs 1, "
+                          "process pool otherwise)")
+    sel.add_argument("--results-dir", default=None,
+                     help="persist per-scope shards + merged.json under "
+                          "<dir>/<run-id>/")
+    sel.add_argument("--run-id", default=None,
+                     help="run directory name (default: timestamp)")
+    sel.add_argument("--baseline", default=None,
+                     help="compare this run against a stored baseline "
+                          "document/run directory")
+    sel.add_argument("--save-baseline", default=None,
+                     help="store the merged document as a baseline at PATH")
     sel_ns, rest = sel.parse_known_args(argv)
 
     mgr = ScopeManager()
@@ -70,13 +107,28 @@ def main(argv: Optional[List[str]] = None,
     if not benches:
         log.error("no benchmarks match %r", pattern)
         return 1
+    # don't dispatch workers for scopes the filter selects nothing from —
+    # each would pay a fresh interpreter + JAX import to return 0 records
+    matched = {b.scope for b in benches}
+    mgr.configure(disable=[name for name, _ in mgr.dispatchable()
+                           if name not in matched])
 
-    opts = RunOptions(
-        min_time=FLAGS.get("benchmark_min_time", 0.05),
-        repetitions=FLAGS.get("benchmark_repetitions", 1),
+    opts = OrchestratorOptions(
+        jobs=sel_ns.jobs,
+        isolate=sel_ns.isolate,
+        benchmark_filter=pattern,
+        run=RunOptions(
+            min_time=FLAGS.get("benchmark_min_time", 0.05),
+            repetitions=FLAGS.get("benchmark_repetitions", 1),
+        ),
+        flag_values={s.name: FLAGS.get(s.name) for s in FLAGS.declared()},
+        results_dir=sel_ns.results_dir,
+        run_id=sel_ns.run_id,
     )
-    doc = run_benchmarks(benches, opts,
-                         context_extra={"scopes": mgr.status()})
+    result = execute(mgr, REGISTRY, opts,
+                     context_extra={"scopes": mgr.status()})
+    doc = result.doc
+
     out = FLAGS.get("benchmark_out")
     if out:
         write_json(doc, out)
@@ -84,7 +136,19 @@ def main(argv: Optional[List[str]] = None,
     else:
         write_json(doc, sys.stdout)
         print()
-    return 0
+
+    rc = 0
+    if sel_ns.baseline:
+        comps = compare_documents(load_document(sel_ns.baseline), doc)
+        print(format_comparisons(comps), file=sys.stderr)
+        counts = summarize(comps)
+        log.info("baseline diff: %s",
+                 ", ".join(f"{v} {k}" for k, v in sorted(counts.items())))
+        if gate_failures(comps):
+            rc = 1
+    if sel_ns.save_baseline:
+        save_baseline(doc, sel_ns.save_baseline)
+    return rc
 
 
 if __name__ == "__main__":

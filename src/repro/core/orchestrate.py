@@ -1,0 +1,444 @@
+"""Run-orchestration subsystem — parallel, failure-isolated scope execution.
+
+This is the run stage of the SCOPE binary (paper Fig. 2(d)) rebuilt as an
+orchestrator instead of a sequential loop.  The paper's design goal —
+independently-developed scopes share one portable harness — extends
+naturally to execution: scopes share *nothing* at run time, so each enabled
+scope becomes one schedulable unit of work:
+
+  * **parallelism** — scopes run in a process pool (``--jobs N``); each
+    worker is a fresh interpreter (spawn) with its own registry/flags, so
+    parallel scopes cannot contend on the global registry or JAX state;
+  * **failure isolation** — a scope that *errors* produces an error shard;
+    a scope that *kills its interpreter* (segfault, ``os._exit``) breaks
+    only its worker: the orchestrator retries interpreter-killing scopes
+    in standalone subprocesses (``python -m repro.core.orchestrate
+    --worker``) and degrades them to error shards if they die again;
+  * **streaming shards** — every scope yields a self-contained
+    Google-Benchmark JSON document (a *shard*); shards are persisted under
+    ``results/<run-id>/<scope>.json`` as they complete and merged into one
+    schema-identical document (``merged.json``) at the end, so a crash
+    mid-run loses only the unfinished scopes;
+  * **baseline diffing** — the merged document is what
+    :mod:`repro.core.baseline` stores and compares (``python -m repro
+    compare A.json B.json``).
+
+The merged document keeps the exact ``{"context", "benchmarks"}`` schema
+:func:`repro.core.runner.run_benchmarks` emits — per-shard provenance is
+tucked inside ``context["shards"]`` so any Google-Benchmark-compatible
+consumer (ScopePlot included) reads merged output unchanged.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing
+import os
+import subprocess
+import sys
+import tempfile
+import time
+import traceback
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor, as_completed
+from concurrent.futures.process import BrokenProcessPool
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .logging import get_logger
+from .runner import RunOptions, run_benchmarks, write_json
+from .sysinfo import build_context
+
+log = get_logger("orchestrate")
+
+# Shard status values.
+OK = "ok"            # scope ran; doc holds its records (may include errors)
+ERROR = "error"      # scope failed to import/register/run; no records
+CRASHED = "crashed"  # scope killed its interpreter(s); no records
+
+
+def _spawn_safe_main() -> bool:
+    main = sys.modules.get("__main__")
+    if getattr(main, "__spec__", None) is not None:   # python -m …
+        return True
+    path = getattr(main, "__file__", None)
+    return bool(path and os.path.exists(path))
+
+
+@dataclass
+class OrchestratorOptions:
+    """How to schedule the enabled scopes."""
+
+    jobs: int = 1                   # worker parallelism (1 → inline)
+    isolate: str = "auto"           # auto | inline | pool | subprocess
+    benchmark_filter: str = ".*"
+    run: RunOptions = field(default_factory=RunOptions)
+    # parsed flag values forwarded to workers (scopes read global FLAGS)
+    flag_values: Dict[str, Any] = field(default_factory=dict)
+    results_dir: Optional[str] = None   # persist shards+merged when set
+    run_id: Optional[str] = None        # defaults to a timestamp
+    subprocess_timeout: float = 1800.0
+
+    def mode(self) -> str:
+        if self.isolate != "auto":
+            return self.isolate
+        if self.jobs <= 1:
+            return "inline"
+        # spawn re-executes __main__; a parent without a real main module
+        # (stdin, embedded interpreter) would break every pool worker at
+        # startup, so fall straight to standalone subprocesses there.
+        return "pool" if _spawn_safe_main() else "subprocess"
+
+
+@dataclass
+class ScopeShard:
+    """One scope's contribution to a run."""
+
+    scope: str
+    module: str
+    status: str = OK
+    doc: Optional[Dict[str, Any]] = None   # GB-JSON document when status==OK
+    error: str = ""
+    duration_s: float = 0.0
+
+    def meta(self) -> Dict[str, Any]:
+        m: Dict[str, Any] = {"scope": self.scope, "module": self.module,
+                             "status": self.status,
+                             "duration_s": round(self.duration_s, 6)}
+        if self.error:
+            m["error"] = self.error
+        return m
+
+
+@dataclass
+class RunResult:
+    """Merged document + per-scope shards, as returned by :func:`execute`."""
+
+    doc: Dict[str, Any]
+    shards: List[ScopeShard]
+    run_id: str
+    out_dir: Optional[str] = None
+
+    def shard(self, scope: str) -> Optional[ScopeShard]:
+        for s in self.shards:
+            if s.scope == scope:
+                return s
+        return None
+
+
+# ---------------------------------------------------------------------------
+# worker (runs in a fresh interpreter under pool/subprocess isolation)
+# ---------------------------------------------------------------------------
+
+def run_one_scope(module: str, run_opts: RunOptions, benchmark_filter: str,
+                  flag_values: Optional[Dict[str, Any]] = None
+                  ) -> Dict[str, Any]:
+    """Load ONE scope module and run its benchmarks; return the GB-JSON doc.
+
+    Top-level (picklable) so it can be dispatched to a spawn-context
+    process pool.  Uses the process-global registry/flags/hooks because
+    scope bodies read them (e.g. ``FLAGS.get("example/greet")``) — under
+    pool/subprocess isolation the process is fresh, so this *is* a clean
+    slate; callers running inline should prefer :func:`execute`.
+    """
+    from .flags import FLAGS
+    from .hooks import HOOKS
+    from .registry import REGISTRY
+    from .scope import ScopeManager
+
+    REGISTRY.reset()
+    mgr = ScopeManager()
+    mgr.load([module])
+    loaded = mgr.scopes()[0]
+    if not loaded.available:
+        raise RuntimeError(f"scope module {module} failed to import:\n"
+                           f"{loaded.error}")
+    for name, value in (flag_values or {}).items():
+        FLAGS.set(name, value)
+    rc = HOOKS.run_pre_parse()
+    if rc is None:
+        rc = HOOKS.run_post_parse()
+    if rc is not None:
+        raise RuntimeError(f"scope {loaded.scope.name} init hook requested "
+                           f"exit ({rc})")
+    mgr.register_all()
+    if not loaded.available:
+        raise RuntimeError(f"scope {loaded.scope.name} registration "
+                           f"failed:\n{loaded.error}")
+    benches = REGISTRY.filter(benchmark_filter,
+                              scopes=[loaded.scope.name])
+    return run_benchmarks(benches, run_opts,
+                          context_extra={"scope": loaded.scope.name},
+                          progress=False)
+
+
+def _pool_worker(module: str, run_opts_dict: Dict[str, Any],
+                 benchmark_filter: str, flag_values: Dict[str, Any]
+                 ) -> Tuple[Dict[str, Any], float]:
+    """Returns (doc, runtime) — timed in the worker, excluding queue wait."""
+    t0 = time.perf_counter()
+    doc = run_one_scope(module, RunOptions(**run_opts_dict),
+                        benchmark_filter, flag_values)
+    return doc, time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# execution strategies
+# ---------------------------------------------------------------------------
+
+def _run_inline(name: str, module: str, registry, opts: OrchestratorOptions
+                ) -> ScopeShard:
+    """Run a scope in-process against the parent's already-built registry."""
+    t0 = time.perf_counter()
+    try:
+        benches = registry.filter(opts.benchmark_filter, scopes=[name])
+        doc = run_benchmarks(benches, opts.run,
+                             context_extra={"scope": name}, progress=False)
+        return ScopeShard(name, module, OK, doc,
+                          duration_s=time.perf_counter() - t0)
+    except Exception:  # noqa: BLE001 - isolation requirement
+        return ScopeShard(name, module, ERROR,
+                          error=traceback.format_exc(limit=4),
+                          duration_s=time.perf_counter() - t0)
+
+
+def _run_subprocess(name: str, module: str, opts: OrchestratorOptions
+                    ) -> ScopeShard:
+    """Run a scope in a standalone interpreter — survives hard crashes."""
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as tmp:
+        out = os.path.join(tmp, "shard.json")
+        cmd = [sys.executable, "-m", "repro.core.orchestrate",
+               "--worker", "--module", module, "--out", out,
+               "--filter", opts.benchmark_filter,
+               "--run-json", json.dumps(asdict(opts.run)),
+               "--flags-json", json.dumps(opts.flag_values)]
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=opts.subprocess_timeout)
+        except subprocess.TimeoutExpired:
+            return ScopeShard(name, module, CRASHED,
+                              error=f"timed out after "
+                                    f"{opts.subprocess_timeout}s",
+                              duration_s=time.perf_counter() - t0)
+        if proc.returncode != 0 or not os.path.exists(out):
+            payload = None
+            if os.path.exists(out):
+                try:
+                    with open(out) as f:
+                        payload = json.load(f)
+                except (OSError, json.JSONDecodeError):
+                    payload = None
+            if isinstance(payload, dict) and "worker_error" in payload:
+                # worker survived to report a clean Python exception —
+                # an ERROR shard, same as pool/inline would produce
+                return ScopeShard(name, module, ERROR,
+                                  error=payload["worker_error"],
+                                  duration_s=time.perf_counter() - t0)
+            return ScopeShard(
+                name, module, CRASHED,
+                error=f"worker exited {proc.returncode}:\n"
+                      f"{proc.stderr[-2000:]}",
+                duration_s=time.perf_counter() - t0)
+        with open(out) as f:
+            doc = json.load(f)
+    return ScopeShard(name, module, OK, doc,
+                      duration_s=time.perf_counter() - t0)
+
+
+def _run_pool(items: Sequence[Tuple[str, str]], opts: OrchestratorOptions,
+              on_shard) -> List[ScopeShard]:
+    """Process-pool execution with subprocess fallback on worker death.
+
+    A worker that raises keeps the pool alive and yields an error shard.
+    A worker that *dies* (segfault/``os._exit``) breaks the whole
+    ProcessPoolExecutor — every unfinished scope then falls back to its
+    own standalone subprocess, so one hostile scope cannot take down the
+    rest of the run.
+    """
+    ctx = multiprocessing.get_context("spawn")
+    shards: Dict[str, ScopeShard] = {}
+    retry: List[Tuple[str, str]] = []
+    run_dict = asdict(opts.run)
+    t_submit = time.perf_counter()
+    pool = ProcessPoolExecutor(max_workers=max(1, opts.jobs),
+                               mp_context=ctx)
+    try:
+        futs = {pool.submit(_pool_worker, module, run_dict,
+                            opts.benchmark_filter,
+                            opts.flag_values): (name, module)
+                for name, module in items}
+        for fut in as_completed(futs):
+            name, module = futs[fut]
+            try:
+                doc, dt = fut.result()
+                shards[name] = ScopeShard(name, module, OK, doc,
+                                          duration_s=dt)
+                on_shard(shards[name])
+            except BrokenProcessPool:
+                retry.append((name, module))
+            except Exception:  # noqa: BLE001 - worker raised, pool alive
+                shards[name] = ScopeShard(
+                    name, module, ERROR,
+                    error=traceback.format_exc(limit=4),
+                    duration_s=time.perf_counter() - t_submit)
+                on_shard(shards[name])
+    finally:
+        pool.shutdown(wait=False, cancel_futures=True)
+
+    if retry:
+        log.warning("process pool broke; retrying %d scope(s) in "
+                    "standalone subprocesses: %s",
+                    len(retry), [n for n, _ in retry])
+        with ThreadPoolExecutor(max_workers=max(1, opts.jobs)) as tp:
+            sub_futs = {tp.submit(_run_subprocess, n, m, opts): n
+                        for n, m in retry}
+            for fut in as_completed(sub_futs):
+                shard = fut.result()
+                shards[shard.scope] = shard
+                on_shard(shard)
+    # preserve the submitted scope order in the output
+    return [shards[name] for name, _ in items if name in shards]
+
+
+# ---------------------------------------------------------------------------
+# merge + persistence
+# ---------------------------------------------------------------------------
+
+def scope_error_record(shard: ScopeShard) -> Dict[str, Any]:
+    """A schema-conforming GB record marking a failed/crashed scope."""
+    return {
+        "name": f"{shard.scope}/SCOPE_FAILED",
+        "run_name": f"{shard.scope}/SCOPE_FAILED",
+        "run_type": "iteration",
+        "repetitions": 1, "repetition_index": 0, "threads": 1,
+        "iterations": 0, "real_time": 0.0, "cpu_time": 0.0,
+        "time_unit": "us",
+        "error_occurred": True,
+        "error_message": f"[{shard.status}] {shard.error}".strip(),
+    }
+
+
+def merge_shards(shards: Sequence[ScopeShard],
+                 context_extra: Optional[Dict[str, Any]] = None,
+                 run_id: Optional[str] = None) -> Dict[str, Any]:
+    """Concatenate shard documents into one GB-JSON document.
+
+    Top-level schema is identical to the sequential
+    :func:`~repro.core.runner.run_benchmarks` output (``context`` +
+    ``benchmarks``); shard provenance lives in ``context["shards"]``.
+    """
+    ctx = build_context(context_extra)
+    if run_id:
+        ctx["run_id"] = run_id
+    ctx["shards"] = [s.meta() for s in shards]
+    benchmarks: List[Dict[str, Any]] = []
+    for s in shards:
+        if s.status == OK and s.doc is not None:
+            benchmarks.extend(s.doc.get("benchmarks", []))
+        else:
+            benchmarks.append(scope_error_record(s))
+    return {"context": ctx, "benchmarks": benchmarks}
+
+
+def default_run_id() -> str:
+    return time.strftime("%Y%m%dT%H%M%S") + f"-{os.getpid()}"
+
+
+def _persist_shard(out_dir: str, shard: ScopeShard) -> None:
+    doc = shard.doc if shard.status == OK and shard.doc is not None else {
+        "context": {"scope": shard.scope, **shard.meta()},
+        "benchmarks": [scope_error_record(shard)],
+    }
+    write_json(doc, os.path.join(out_dir, f"{shard.scope}.json"))
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def execute(mgr, registry, opts: OrchestratorOptions,
+            context_extra: Optional[Dict[str, Any]] = None) -> RunResult:
+    """Run every enabled scope of ``mgr`` under ``opts``; merge the shards.
+
+    ``mgr`` must already be loaded/configured; for inline mode it must
+    also be registered (``mgr.register_all()``).  External scopes (added
+    with ``add_scope``, no importable module) always run inline — a
+    worker cannot re-import them.
+    """
+    items = mgr.dispatchable()
+    run_id = opts.run_id or default_run_id()
+    out_dir = None
+    if opts.results_dir:
+        out_dir = os.path.join(opts.results_dir, run_id)
+        os.makedirs(out_dir, exist_ok=True)
+
+    def on_shard(shard: ScopeShard) -> None:
+        log.info("scope %s: %s (%d records, %.2fs)", shard.scope,
+                 shard.status,
+                 len(shard.doc["benchmarks"]) if shard.doc else 0,
+                 shard.duration_s)
+        if out_dir:
+            _persist_shard(out_dir, shard)
+
+    mode = opts.mode()
+    parallel_items = [(n, m) for n, m in items if m != "<external>"]
+    inline_items = [(n, m) for n, m in items if m == "<external>"]
+    if mode == "inline":
+        inline_items, parallel_items = items, []
+
+    shards: List[ScopeShard] = []
+    for name, module in inline_items:
+        shard = _run_inline(name, module, registry, opts)
+        on_shard(shard)
+        shards.append(shard)
+    if parallel_items:
+        if mode == "subprocess":
+            with ThreadPoolExecutor(max_workers=max(1, opts.jobs)) as tp:
+                futs = {tp.submit(_run_subprocess, n, m, opts): (n, m)
+                        for n, m in parallel_items}
+                got = {}
+                for fut in as_completed(futs):
+                    shard = fut.result()
+                    on_shard(shard)
+                    got[shard.scope] = shard
+            shards.extend(got[n] for n, _ in parallel_items if n in got)
+        else:
+            shards.extend(_run_pool(parallel_items, opts, on_shard))
+
+    doc = merge_shards(shards, context_extra=context_extra, run_id=run_id)
+    if out_dir:
+        write_json(doc, os.path.join(out_dir, "merged.json"))
+        log.info("wrote %s (%d records from %d shards)",
+                 os.path.join(out_dir, "merged.json"),
+                 len(doc["benchmarks"]), len(shards))
+    return RunResult(doc=doc, shards=shards, run_id=run_id, out_dir=out_dir)
+
+
+# ---------------------------------------------------------------------------
+# standalone worker CLI (the subprocess-isolation entry)
+# ---------------------------------------------------------------------------
+
+def _worker_main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.core.orchestrate")
+    ap.add_argument("--worker", action="store_true", required=True)
+    ap.add_argument("--module", required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--filter", default=".*")
+    ap.add_argument("--run-json", default="{}")
+    ap.add_argument("--flags-json", default="{}")
+    ns = ap.parse_args(argv)
+    try:
+        doc = run_one_scope(ns.module,
+                            RunOptions(**json.loads(ns.run_json)),
+                            ns.filter, json.loads(ns.flags_json))
+    except Exception:  # noqa: BLE001 - report, don't look like a crash
+        # a clean Python failure is an ERROR shard, not a CRASHED one —
+        # write the traceback so the parent can tell them apart
+        write_json({"worker_error": traceback.format_exc(limit=6)}, ns.out)
+        return 3
+    write_json(doc, ns.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(_worker_main())

@@ -20,7 +20,7 @@ from __future__ import annotations
 import importlib
 import traceback
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .flags import FLAGS, FlagRegistry
 from .hooks import HOOKS, HookChain
@@ -122,6 +122,11 @@ class ScopeManager:
                   disable: Optional[List[str]] = None) -> None:
         if enable:
             only = set(enable)
+            unknown = only - set(self._scopes)
+            if unknown:
+                log.warning("--enable-scope names no loaded scope: %s "
+                            "(have %s)", sorted(unknown),
+                            sorted(self._scopes))
             for s in self._scopes.values():
                 s.enabled = s.scope.name in only
         for name in disable or []:
@@ -143,6 +148,17 @@ class ScopeManager:
     # -- introspection ------------------------------------------------
     def scopes(self) -> List[_LoadedScope]:
         return list(self._scopes.values())
+
+    def dispatchable(self) -> List[Tuple[str, str]]:
+        """(name, module) pairs for every enabled+available scope.
+
+        This is the orchestrator's work list (repro.core.orchestrate):
+        module names are re-imported by pool/subprocess workers; scopes
+        added via :meth:`add_scope` carry module ``"<external>"`` and are
+        run inline by the orchestrator instead.
+        """
+        return [(s.scope.name, s.module) for s in self._scopes.values()
+                if s.enabled and s.available]
 
     def status(self) -> Dict[str, str]:
         return {

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.compat import shard_map as shard_map_compat
 from repro.distributed.logical import constrain
 
 Params = Dict[str, Any]
@@ -458,6 +459,14 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     a ``cache.astype(f32)`` here gets hoisted out of the layer scan by
     XLA's loop-widening pass, materializing the whole multi-GiB cache in
     fp32 (observed +12 GiB/device on moonshot decode_32k).
+
+    Numerics mirror ``_flash_fwd_scan`` op-for-op (scale folded into q in
+    the cache dtype; probabilities rounded to the value dtype BEFORE the
+    normalizing sum; out = pv / l): decode must reproduce the prefill
+    path's rounding, otherwise ulp-level drift in the hidden state flips
+    near-tied MoE router choices and decode diverges from teacher forcing
+    (observed on deepseek-moe-16b: a top-2 gate at 0.506/0.494 flipped at
+    layer 0, 0.41 logit error downstream).
     """
     B, _, H, D = q.shape
     # barrier: without it, the CPU backend legalizes the bf16 dot below as
@@ -467,18 +476,24 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     k_cache, v_cache = lax.optimization_barrier((k_cache, v_cache))
     kr = repeat_kv(k_cache, H)
     vr = repeat_kv(v_cache, H)
-    qc = q.astype(kr.dtype)
-    s = jnp.einsum("bqhd,bshd->bhqs", qc, kr,
-                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    qs = q.astype(kr.dtype) * jnp.asarray(1.0 / math.sqrt(D), kr.dtype)
+    s = jnp.einsum("bqhd,bshd->bhqs", qs, kr,
+                   preferred_element_type=jnp.float32)
     s = constrain(s, "batch", "heads", None, None)
     cl = jnp.asarray(cache_len)
     if cl.ndim == 1:                      # ragged: per-row valid prefix [B]
         cl = cl[:, None, None, None]
     mask = jnp.arange(kr.shape[1])[None, None, None, :] < cl
     s = jnp.where(mask, s, -jnp.inf)
-    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
-    o = jnp.einsum("bhqs,bshd->bqhd", w.astype(vr.dtype), vr,
-                   preferred_element_type=jnp.float32)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.exp(s - m_safe[..., None]).astype(vr.dtype)
+    p = jnp.where(jnp.isneginf(s), 0.0, p)
+    l = jnp.sum(p.astype(jnp.float32), axis=-1)
+    pv = jnp.einsum("bhqs,bshd->bhqd", p, vr,
+                    preferred_element_type=jnp.float32)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o = jnp.transpose(pv / l_safe[..., None], (0, 2, 1, 3))
     return o.astype(q.dtype)
 
 
@@ -743,11 +758,11 @@ def moe_shard_map(p: Params, x: jax.Array, cfg, rules
         y = lax.psum(y, ep_axis)            # combine across expert ranks
         return y.reshape(B, S, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map_compat(
         local_fn, mesh=mesh,
         in_specs=(x_spec, w_specs),
         out_specs=(x_spec, P()),
-        check_vma=False,
+        check=False,
     )(x, weights)
     if cfg.moe_num_shared:
         y = y + mlp(p["shared"], x, cfg.act)

@@ -33,6 +33,11 @@ class BenchmarkRecord:
         return self.raw.get("name", "")
 
     @property
+    def scope(self) -> str:
+        """Owning scope, from the ``<scope>/<family>`` name prefix."""
+        return self.name.split("/", 1)[0] if "/" in self.name else ""
+
+    @property
     def real_time(self) -> Optional[float]:
         return self.raw.get("real_time")
 
@@ -95,6 +100,27 @@ class BenchmarkFile:
     def save(self, path) -> None:
         with open(path, "w") as f:
             json.dump(self.to_dict(), f, indent=2)
+
+    # -- merged-shard documents (repro.core.orchestrate) ----------------
+    def shards(self) -> List[Dict[str, Any]]:
+        """Per-scope shard metadata of an orchestrator-merged document
+        (``[]`` for plain single-run documents)."""
+        return list(self.context.get("shards", []))
+
+    def scope_names(self) -> List[str]:
+        out: List[str] = []
+        for r in self.records:
+            s = r.scope
+            if s and s not in out:
+                out.append(s)
+        return out
+
+    def for_scope(self, scope: str) -> "BenchmarkFile":
+        """Slice a merged document back into one scope's records."""
+        return BenchmarkFile(
+            context=self.context,
+            records=[r for r in self.records if r.scope == scope],
+        )
 
     # -- manipulation ------------------------------------------------
     def filter_name(self, pattern: str) -> "BenchmarkFile":
@@ -173,6 +199,20 @@ class BenchmarkFile:
 
 
 def load(path) -> BenchmarkFile:
+    """Load a GB-JSON document, or an orchestrator run directory
+    (``results/<run-id>/``): its ``merged.json`` when present, else the
+    structure-preserving :func:`cat` of every per-scope shard in it."""
+    import os
+    if os.path.isdir(path):
+        merged = os.path.join(path, "merged.json")
+        if os.path.exists(merged):
+            path = merged
+        else:
+            shards = sorted(f for f in os.listdir(path)
+                            if f.endswith(".json"))
+            if not shards:
+                raise FileNotFoundError(f"no result JSON in {path}")
+            return cat([load(os.path.join(path, f)) for f in shards])
     with open(path) as f:
         return BenchmarkFile.from_dict(json.load(f))
 

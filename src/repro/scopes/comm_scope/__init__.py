@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Scope, State, benchmark, sync
+from repro.core.compat import shard_map
 from repro.core.registry import BenchmarkRegistry
 from repro.core.sysinfo import TPU_V5E
 
@@ -47,9 +48,9 @@ def _register(registry: BenchmarkRegistry) -> None:
 
         @jax.jit
         def f(x):
-            return jax.shard_map(lambda v: jax.lax.psum(v, "x"), mesh=mesh,
-                                 in_specs=jax.sharding.PartitionSpec("x"),
-                                 out_specs=jax.sharding.PartitionSpec())(x)
+            return shard_map(lambda v: jax.lax.psum(v, "x"), mesh=mesh,
+                             in_specs=jax.sharding.PartitionSpec("x"),
+                             out_specs=jax.sharding.PartitionSpec())(x)
         sync(f(x))
         while state.keep_running():
             sync(f(x))

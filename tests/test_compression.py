@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.distributed.compression import (bf16_compress, bf16_decompress,
                                            ef_compress_tree, int8_dequantize,

@@ -1,6 +1,6 @@
 """Core benchmark registry: registration, sweeps, filtering (paper §III)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.benchmark import Benchmark, State
 from repro.core.registry import BenchmarkRegistry, benchmark

@@ -1,6 +1,6 @@
 """Data pipeline: determinism, resumability, host-sharding, packing."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.data import DataConfig, SyntheticLM, make_pipeline
 

@@ -3,7 +3,7 @@ import json
 
 import pytest
 import yaml
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.scopeplot import BenchmarkFile, Frame, cat, filter_name, loads
 from repro.scopeplot.plot import (load_spec, quick_bar, render_spec,
