@@ -2,9 +2,12 @@
 
   * Table IV (the scopes): every completed scope runs through the core
     run orchestrator (repro.core.orchestrate) — failure-isolated, and
-    parallel across scopes when ``BENCH_JOBS>1``; each benchmark instance
-    prints ``name,us_per_call,derived`` where ``derived`` is the scope's
-    natural rate (GB/s, Mitems/s, modeled seconds, ...);
+    parallel across benchmark instances when ``BENCH_JOBS>1``; each
+    benchmark instance prints ``name,us_per_call,derived`` where
+    ``derived`` is the scope's natural rate (GB/s, Mitems/s, modeled
+    seconds, ...).  The scope list is the ScopeManager's builtin set —
+    new scopes join the harness by joining ``BUILTIN_SCOPES``, nothing
+    here to update;
   * Figure 3 (ScopePlot line plot): regenerates the example saxpy plot
     from live results via the scopeplot spec pipeline;
   * §Roofline feed: the model scope surfaces the dry-run cells when
@@ -14,12 +17,12 @@ Wall-clock numbers are CPU wall-clock on this container (framework
 overhead + relative comparisons); TPU numbers are the modeled columns.
 
 Env knobs: ``BENCH_JOBS`` (worker parallelism, default 1 → inline),
-``BENCH_RESULTS_DIR`` (persist per-scope shards + merged.json).
+``BENCH_SHARD_GRAIN`` (``auto``/``benchmark``/``scope``),
+``BENCH_RESULTS_DIR`` (persist shards + manifest + merged.json),
+``BENCH_BASELINE`` (baseline document/run dir; adds a per-benchmark
+``regression``/``improvement``/``similar`` verdict column).
 """
 import os
-
-SCOPES = ["example", "mxu", "comm", "nn", "instr", "histo", "linalg", "io",
-          "model"]
 
 
 def _derived(rec) -> str:
@@ -33,28 +36,67 @@ def _derived(rec) -> str:
     return ""
 
 
-def _print_shard(shard) -> None:
+def _print_shard(shard, verdicts=None) -> None:
     from repro.scopeplot import BenchmarkFile
-    if shard.status != "ok" or shard.doc is None:
+    if shard.status not in ("ok", "partial") or shard.doc is None:
         first = shard.error.strip().splitlines()[-1] if shard.error else \
             shard.status
         print(f"{shard.scope}/SCOPE_FAILED,0.00,{first}")
         return
     bf = BenchmarkFile.from_dict(shard.doc)
-    for rec in bf.without_errors():
-        if rec.raw.get("run_type") == "aggregate":
+    for rec in bf:
+        if rec.raw.get("run_type") == "aggregate" or rec.raw.get("skipped"):
             continue
+        if rec.raw.get("error_occurred"):
+            # a failed instance must stay visible in the table — that is
+            # the point of per-instance failure isolation
+            msg = (rec.raw.get("error_message") or "error").strip()
+            lines = msg.splitlines()
+            # "[crashed] worker exited N:" leads; tracebacks end with the
+            # exception — pick whichever line carries the signal
+            derived = (lines[0] if msg.startswith("[crashed]")
+                       else lines[-1]).replace(",", ";")
+        else:
+            derived = _derived(rec)
         us = rec.real_time_seconds()
         us = us * 1e6 if us is not None else float("nan")
-        print(f"{rec.name},{us:.2f},{_derived(rec)}")
+        line = f"{rec.name},{us:.2f},{derived}"
+        if verdicts is not None:
+            run_name = rec.raw.get("run_name") or rec.name
+            line += f",{verdicts.get(run_name, '')}"
+        print(line)
+
+
+def _baseline_verdicts(doc):
+    """run_name → verdict against ``BENCH_BASELINE``; None when unset.
+
+    A bad baseline path must not discard a finished run — degrade to no
+    verdict column with a warning.
+    """
+    path = os.environ.get("BENCH_BASELINE")
+    if not path:
+        return None
+    import json as _json
+    import sys
+    from repro.core.baseline import compare_documents, load_document
+    try:
+        base = load_document(path)
+    except (OSError, _json.JSONDecodeError) as e:
+        print(f"BENCH_BASELINE {path} unreadable ({e}); "
+              f"skipping verdict column", file=sys.stderr)
+        return None
+    comps = compare_documents(base, doc)
+    return {c.name: c.verdict for c in comps}
 
 
 def run_all(min_time: float = 0.02):
-    """Run every scope through the orchestrator.
+    """Run every builtin scope through the orchestrator.
 
-    Returns (RunResult, unavailable) where ``unavailable`` maps scopes
-    that failed to import/register to their tracebacks — the orchestrator
-    never schedules those, but the harness must still report them.
+    Returns (RunResult, unavailable, scope_names) where ``unavailable``
+    maps scopes that failed to import/register to their tracebacks — the
+    orchestrator never schedules those, but the harness must still report
+    them — and ``scope_names`` is the ScopeManager's load order, so the
+    harness can't silently miss a scope the binary knows about.
     """
     from repro.core import REGISTRY, RunOptions
     from repro.core.orchestrate import OrchestratorOptions, execute
@@ -63,10 +105,12 @@ def run_all(min_time: float = 0.02):
     jobs = int(os.environ.get("BENCH_JOBS", "1"))
     REGISTRY.reset()
     mgr = ScopeManager()
-    mgr.load([f"repro.scopes.{s}_scope" for s in SCOPES])
+    mgr.load(None)                       # BUILTIN_SCOPES — the Table IV set
     mgr.register_all()
+    scope_names = [s.scope.name for s in mgr.scopes()]
     opts = OrchestratorOptions(
         jobs=jobs,
+        shard_grain=os.environ.get("BENCH_SHARD_GRAIN", "auto"),
         run=RunOptions(min_time=min_time),
         results_dir=os.environ.get("BENCH_RESULTS_DIR"),
     )
@@ -74,7 +118,7 @@ def run_all(min_time: float = 0.02):
                      context_extra={"scopes": mgr.status()})
     unavailable = {s.scope.name: s.error for s in mgr.scopes()
                    if not s.available}
-    return result, unavailable
+    return result, unavailable, scope_names
 
 
 def figure3_plot(docs) -> None:
@@ -105,17 +149,18 @@ def figure3_plot(docs) -> None:
 
 
 def main() -> None:
-    result, unavailable = run_all()
+    result, unavailable, scopes = run_all()
+    verdicts = _baseline_verdicts(result.doc)
     docs = {}
-    for scope in SCOPES:
+    for scope in scopes:
         shard = result.shard(scope)
         if shard is None:
             err = unavailable.get(scope, "not scheduled")
             last = err.strip().splitlines()[-1] if err else "not scheduled"
             print(f"{scope}/SCOPE_FAILED,0.00,{last}")
             continue
-        _print_shard(shard)
-        if shard.status == "ok":
+        _print_shard(shard, verdicts)
+        if shard.status in ("ok", "partial"):
             docs[scope] = shard.doc
     figure3_plot(docs)
 

@@ -23,11 +23,13 @@ from .flags import FLAGS, FlagRegistry
 from .hooks import HOOKS, HookChain
 from .logging import get_logger
 from .baseline import Comparison, compare_documents, save_baseline
-from .orchestrate import (OrchestratorOptions, RunResult, ScopeShard,
-                          execute, merge_shards)
+from .orchestrate import (InstanceResult, OrchestratorOptions, RunResult,
+                          ScopeShard, execute, merge_shards)
+from .plan import Plan, PlanItem, build_plan, load_cost_hints
 from .registry import (REGISTRY, BenchmarkRegistry, benchmark,
                        register_benchmark)
-from .runner import RunOptions, run_benchmarks, write_json
+from .runner import (RunOptions, run_benchmarks, run_single_instance,
+                     write_json)
 from .scope import BUILTIN_SCOPES, Scope, ScopeManager
 from .sysinfo import TPU_V5E, build_context
 
@@ -37,9 +39,11 @@ __all__ = [
     "check_sharding", "checked", "sync",
     "FLAGS", "FlagRegistry", "HOOKS", "HookChain", "get_logger",
     "REGISTRY", "BenchmarkRegistry", "benchmark", "register_benchmark",
-    "RunOptions", "run_benchmarks", "write_json",
+    "RunOptions", "run_benchmarks", "run_single_instance", "write_json",
     "BUILTIN_SCOPES", "Scope", "ScopeManager",
-    "OrchestratorOptions", "RunResult", "ScopeShard", "execute",
-    "merge_shards", "Comparison", "compare_documents", "save_baseline",
+    "Plan", "PlanItem", "build_plan", "load_cost_hints",
+    "InstanceResult", "OrchestratorOptions", "RunResult", "ScopeShard",
+    "execute", "merge_shards", "Comparison", "compare_documents",
+    "save_baseline",
     "TPU_V5E", "build_context",
 ]

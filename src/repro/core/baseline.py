@@ -195,22 +195,56 @@ def format_comparisons(comparisons: List[Comparison]) -> str:
 # document I/O
 # ---------------------------------------------------------------------------
 
+def run_dir_shard_files(path: str) -> List[str]:
+    """Shard files of a run directory, in merge order.
+
+    Instance shards (``shards/*.json``, benchmark-grained runs) come
+    first, ordered by ``manifest.json``'s plan order when it exists so an
+    interrupted run reads back in the same benchmark order its
+    ``merged.json`` would have had; scope-grained shards at the top level
+    follow, sorted by name.
+    """
+    out: List[str] = []
+    sub = os.path.join(path, "shards")
+    if os.path.isdir(sub):
+        names = sorted(f for f in os.listdir(sub) if f.endswith(".json"))
+        mf = os.path.join(path, "manifest.json")
+        if os.path.exists(mf):
+            try:
+                with open(mf) as f:
+                    manifest = json.load(f)
+                planned = [os.path.basename(e.get("shard", ""))
+                           for e in manifest.get("items", [])]
+                have = set(names)
+                ordered = [n for n in planned if n in have]
+                names = ordered + [n for n in names if n not in set(planned)]
+            except (OSError, json.JSONDecodeError):
+                pass
+        out.extend(os.path.join(sub, n) for n in names)
+    out.extend(os.path.join(path, f) for f in sorted(os.listdir(path))
+               if f.endswith(".json")
+               and f not in ("merged.json", "manifest.json"))
+    return out
+
+
 def load_document(path: str) -> Dict[str, Any]:
     """Load a GB-JSON document; a ``results/<run-id>`` directory works too
-    — its ``merged.json`` when present, else the concatenation of the
-    per-scope shards (a run interrupted before the merge still compares)."""
+    — its ``merged.json`` when present, else the concatenation of its
+    shards (a run interrupted before the merge still compares).  Both
+    scope-grained (``<scope>.json``) and benchmark-grained
+    (``shards/<instance>.json`` + ``manifest.json``) run directories read
+    back through the same merged, schema-identical document."""
     if os.path.isdir(path):
         merged = os.path.join(path, "merged.json")
         if os.path.exists(merged):
             path = merged
         else:
-            shards = sorted(f for f in os.listdir(path)
-                            if f.endswith(".json"))
+            shards = run_dir_shard_files(path)
             if not shards:
                 raise FileNotFoundError(f"no result JSON in {path}")
             doc: Dict[str, Any] = {"context": {}, "benchmarks": []}
-            for name in shards:
-                with open(os.path.join(path, name)) as f:
+            for shard_path in shards:
+                with open(shard_path) as f:
                     shard = json.load(f)
                 doc["context"] = doc["context"] or shard.get("context", {})
                 doc["benchmarks"].extend(shard.get("benchmarks", []))

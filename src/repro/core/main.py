@@ -2,7 +2,8 @@
 
 Subcommands::
 
-    python -m repro [run] [flags...]     # run benchmarks (default)
+    python -m repro [run] [flags...]       # run benchmarks (default)
+    python -m repro plan [flags...]        # print the work plan + costs
     python -m repro compare A.json B.json  # diff two result documents
 
 Startup sequence mirrors the paper's run stage:
@@ -12,16 +13,19 @@ Startup sequence mirrors the paper's run stage:
   3. parse CLI (core flags + every scope's declared flags)
   4. run post-parse init hooks
   5. enable/disable scopes, register their benchmarks
-  6. filter, then hand the enabled scopes to the run orchestrator
-     (``--jobs N`` parallelizes scopes across failure-isolated workers;
+  6. build the work plan and hand it to the run orchestrator
+     (``--jobs N`` parallelizes across failure-isolated workers;
+     ``--shard-grain benchmark`` schedules individual benchmark
+     instances, ``--resume <run-id>`` completes an interrupted run;
      see repro.core.orchestrate), write the merged GB-JSON data file
   7. optionally diff against / store a baseline (repro.core.baseline)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 from . import logging as scope_logging
 from .baseline import (compare_documents, compare_main, format_comparisons,
@@ -30,6 +34,7 @@ from .baseline import (compare_documents, compare_main, format_comparisons,
 from .flags import FLAGS
 from .hooks import HOOKS
 from .orchestrate import OrchestratorOptions, execute
+from .plan import build_plan, load_cost_hints, scope_worklist
 from .registry import REGISTRY
 from .runner import RunOptions, write_json
 from .scope import ScopeManager
@@ -42,9 +47,33 @@ def main(argv: Optional[List[str]] = None,
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "compare":
         return compare_main(argv[1:])
+    if argv and argv[0] == "plan":
+        return plan_main(argv[1:], scope_modules)
     if argv and argv[0] == "run":
         argv = argv[1:]
     return run_main(argv, scope_modules)
+
+
+def _setup_scopes(scope_modules: Optional[List[str]],
+                  enable: Optional[List[str]], disable: List[str],
+                  rest: List[str]) -> Tuple[Optional[ScopeManager], int]:
+    """Steps 1–5 of the startup sequence, shared by run and plan."""
+    mgr = ScopeManager()
+    mgr.load(scope_modules)
+
+    rc = HOOKS.run_pre_parse()
+    if rc is not None:
+        return None, rc
+
+    FLAGS.parse(rest)
+    scope_logging.set_level(FLAGS.get("log_level", "INFO"))
+
+    rc = HOOKS.run_post_parse()
+    if rc is not None:
+        return None, rc
+
+    mgr.configure(enable=enable, disable=disable)
+    return mgr, 0
 
 
 def run_main(argv: List[str],
@@ -58,16 +87,27 @@ def run_main(argv: List[str],
                      help="disable these scopes (repeatable)")
     sel.add_argument("--list-scopes", action="store_true")
     sel.add_argument("--jobs", type=int, default=1,
-                     help="run scopes in N parallel isolated workers")
+                     help="run work in N parallel isolated workers")
     sel.add_argument("--isolate", default="auto",
                      choices=["auto", "inline", "pool", "subprocess"],
-                     help="worker isolation (auto: inline when --jobs 1, "
-                          "process pool otherwise)")
+                     help="worker isolation (auto: inline when --jobs 1; "
+                          "at benchmark grain, pool and subprocess both "
+                          "run one batch interpreter per worker bin)")
+    sel.add_argument("--shard-grain", default="auto",
+                     choices=["auto", "benchmark", "scope"],
+                     help="schedulable unit (auto: benchmark when "
+                          "--jobs > 1 or resuming, scope otherwise)")
     sel.add_argument("--results-dir", default=None,
-                     help="persist per-scope shards + merged.json under "
-                          "<dir>/<run-id>/")
+                     help="persist shards + manifest.json + merged.json "
+                          "under <dir>/<run-id>/")
     sel.add_argument("--run-id", default=None,
                      help="run directory name (default: timestamp)")
+    sel.add_argument("--resume", default=None, metavar="RUN_ID",
+                     help="re-open <results-dir>/<RUN_ID> and run only the "
+                          "instances whose shard is missing or failed")
+    sel.add_argument("--costs", default=None, metavar="PATH",
+                     help="prior run directory or GB-JSON document used as "
+                          "per-instance cost hints for LPT scheduling")
     sel.add_argument("--baseline", default=None,
                      help="compare this run against a stored baseline "
                           "document/run directory")
@@ -75,21 +115,18 @@ def run_main(argv: List[str],
                      help="store the merged document as a baseline at PATH")
     sel_ns, rest = sel.parse_known_args(argv)
 
-    mgr = ScopeManager()
-    mgr.load(scope_modules)
+    if sel_ns.resume and not sel_ns.results_dir:
+        log.error("--resume requires --results-dir")
+        return 2
+    if sel_ns.resume and sel_ns.shard_grain == "scope":
+        log.error("--resume requires benchmark shard grain "
+                  "(drop --shard-grain scope)")
+        return 2
 
-    rc = HOOKS.run_pre_parse()
-    if rc is not None:
+    mgr, rc = _setup_scopes(scope_modules, sel_ns.enable_scope,
+                            sel_ns.disable_scope, rest)
+    if mgr is None:
         return rc
-
-    FLAGS.parse(rest)
-    scope_logging.set_level(FLAGS.get("log_level", "INFO"))
-
-    rc = HOOKS.run_post_parse()
-    if rc is not None:
-        return rc
-
-    mgr.configure(enable=sel_ns.enable_scope, disable=sel_ns.disable_scope)
     if sel_ns.list_scopes:
         for name, status in sorted(mgr.status().items()):
             print(f"{name:24s} {status}")
@@ -110,12 +147,13 @@ def run_main(argv: List[str],
     # don't dispatch workers for scopes the filter selects nothing from —
     # each would pay a fresh interpreter + JAX import to return 0 records
     matched = {b.scope for b in benches}
-    mgr.configure(disable=[name for name, _ in mgr.dispatchable()
+    mgr.configure(disable=[name for name, _ in scope_worklist(mgr)
                            if name not in matched])
 
     opts = OrchestratorOptions(
         jobs=sel_ns.jobs,
         isolate=sel_ns.isolate,
+        shard_grain=sel_ns.shard_grain,
         benchmark_filter=pattern,
         run=RunOptions(
             min_time=FLAGS.get("benchmark_min_time", 0.05),
@@ -123,7 +161,9 @@ def run_main(argv: List[str],
         ),
         flag_values={s.name: FLAGS.get(s.name) for s in FLAGS.declared()},
         results_dir=sel_ns.results_dir,
-        run_id=sel_ns.run_id,
+        run_id=sel_ns.resume or sel_ns.run_id,
+        resume=bool(sel_ns.resume),
+        cost_source=sel_ns.costs,
     )
     result = execute(mgr, REGISTRY, opts,
                      context_extra={"scopes": mgr.status()})
@@ -149,6 +189,63 @@ def run_main(argv: List[str],
     if sel_ns.save_baseline:
         save_baseline(doc, sel_ns.save_baseline)
     return rc
+
+
+def plan_main(argv: List[str],
+              scope_modules: Optional[List[str]] = None) -> int:
+    """``python -m repro plan`` — print the work plan with predicted costs.
+
+    Shows exactly what a ``--shard-grain benchmark`` run would schedule:
+    every benchmark instance with its stable ID, its predicted cost
+    (``--costs`` hints, else the plan default), and the worker bin LPT
+    assigns it to for the given ``--jobs``.
+    """
+    ap = argparse.ArgumentParser(prog="python -m repro plan",
+                                 add_help=False)
+    ap.add_argument("--enable-scope", action="append", default=None)
+    ap.add_argument("--disable-scope", action="append", default=[])
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker count the bin column assumes")
+    ap.add_argument("--costs", default=None, metavar="PATH",
+                    help="prior run directory or GB-JSON document used as "
+                         "per-instance cost hints")
+    ns, rest = ap.parse_known_args(argv)
+
+    mgr, rc = _setup_scopes(scope_modules, ns.enable_scope,
+                            ns.disable_scope, rest)
+    if mgr is None:
+        return rc
+    mgr.register_all()
+
+    hints = {}
+    if ns.costs:
+        try:
+            hints = load_cost_hints(ns.costs)
+        except (OSError, json.JSONDecodeError) as e:
+            log.warning("cost source %s unreadable (%s); planning without "
+                        "hints", ns.costs, e)
+    pattern = FLAGS.get("benchmark_filter", ".*")
+    plan = build_plan(mgr, REGISTRY, pattern, cost_hints=hints)
+    if not plan.items:
+        log.error("no benchmarks match %r", pattern)
+        return 1
+
+    bins = plan.bins(ns.jobs)
+    bin_of = {item.instance_id: k
+              for k, b in enumerate(bins) for item in b}
+    width = max(len(i.name) for i in plan.items)
+    print(f"{'instance':<{width}}  {'cost_s':>9}  {'hint':>5}  bin  "
+          f"instance_id")
+    for item in plan.items:
+        hint = "prior" if item.cost is not None else "def"
+        print(f"{item.name:<{width}}  {plan.cost_of(item):>9.4f}  "
+              f"{hint:>5}  {bin_of[item.instance_id]:>3d}  "
+              f"{item.instance_id}")
+    loads = [sum(plan.cost_of(i) for i in b) for b in bins]
+    print(f"\n{len(plan.items)} instance(s) across {len(bins)} worker "
+          f"bin(s); predicted total {plan.total_cost():.2f}s, "
+          f"makespan {max(loads):.2f}s")
+    return 0
 
 
 if __name__ == "__main__":

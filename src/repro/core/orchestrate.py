@@ -1,32 +1,42 @@
-"""Run-orchestration subsystem — parallel, failure-isolated scope execution.
+"""Run-orchestration subsystem — plan → schedule → shard → merge.
 
 This is the run stage of the SCOPE binary (paper Fig. 2(d)) rebuilt as an
-orchestrator instead of a sequential loop.  The paper's design goal —
-independently-developed scopes share one portable harness — extends
-naturally to execution: scopes share *nothing* at run time, so each enabled
-scope becomes one schedulable unit of work:
+orchestrator instead of a sequential loop.  Execution is planned at one of
+two granularities (``--shard-grain``):
 
-  * **parallelism** — scopes run in a process pool (``--jobs N``); each
-    worker is a fresh interpreter (spawn) with its own registry/flags, so
-    parallel scopes cannot contend on the global registry or JAX state;
-  * **failure isolation** — a scope that *errors* produces an error shard;
-    a scope that *kills its interpreter* (segfault, ``os._exit``) breaks
-    only its worker: the orchestrator retries interpreter-killing scopes
-    in standalone subprocesses (``python -m repro.core.orchestrate
-    --worker``) and degrades them to error shards if they die again;
-  * **streaming shards** — every scope yields a self-contained
-    Google-Benchmark JSON document (a *shard*); shards are persisted under
-    ``results/<run-id>/<scope>.json`` as they complete and merged into one
-    schema-identical document (``merged.json``) at the end, so a crash
-    mid-run loses only the unfinished scopes;
+  * **benchmark** (default when ``--jobs > 1``) — the work-plan layer
+    (:mod:`repro.core.plan`) enumerates the registry into addressable
+    benchmark *instances*; items are binned across workers with greedy
+    longest-processing-time using cost hints from a prior run, each
+    completed instance is streamed to ``results/<run-id>/shards/<id>.json``,
+    and ``manifest.json`` records plan → shard status.  An interrupted run
+    resumes with ``--resume <run-id>`` (completed instances are skipped,
+    exaCB-style), and a crashed instance degrades only itself — the rest
+    of its scope still reports;
+  * **scope** (the paper's granularity, default when ``--jobs 1``) — each
+    enabled scope is one schedulable unit yielding one shard under
+    ``results/<run-id>/<scope>.json``.
+
+Shared machinery at both grains:
+
+  * **parallelism** — work runs in fresh interpreters (``--jobs N``), each
+    with its own registry/flags, so parallel work cannot contend on the
+    global registry or JAX state;
+  * **failure isolation** — a unit that *errors* produces an error shard;
+    a unit that *kills its interpreter* (segfault, ``os._exit``) is
+    retried in a standalone subprocess (scope grain) or narrowed down to
+    the single poisonous instance (benchmark grain) and degraded to an
+    error record;
+  * **merged document** — shards are merged in plan order into one
+    schema-identical GB-JSON document (``merged.json``), so ``--jobs``,
+    ``--shard-grain``, and ``--resume`` never change the merged output's
+    benchmark names, order, or schema.  Provenance lives inside
+    ``context["shards"]`` (and ``context["instances"]`` at benchmark
+    grain); any Google-Benchmark-compatible consumer (ScopePlot included)
+    reads merged output unchanged;
   * **baseline diffing** — the merged document is what
     :mod:`repro.core.baseline` stores and compares (``python -m repro
     compare A.json B.json``).
-
-The merged document keeps the exact ``{"context", "benchmarks"}`` schema
-:func:`repro.core.runner.run_benchmarks` emits — per-shard provenance is
-tucked inside ``context["shards"]`` so any Google-Benchmark-compatible
-consumer (ScopePlot included) reads merged output unchanged.
 """
 from __future__ import annotations
 
@@ -34,6 +44,7 @@ import argparse
 import json
 import multiprocessing
 import os
+import shutil
 import subprocess
 import sys
 import tempfile
@@ -45,15 +56,21 @@ from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .logging import get_logger
-from .runner import RunOptions, run_benchmarks, write_json
+from .plan import Plan, PlanItem, build_plan, load_cost_hints, scope_worklist
+from .runner import (RunOptions, run_benchmarks, run_single_instance,
+                     write_json)
 from .sysinfo import build_context
 
 log = get_logger("orchestrate")
 
 # Shard status values.
-OK = "ok"            # scope ran; doc holds its records (may include errors)
-ERROR = "error"      # scope failed to import/register/run; no records
-CRASHED = "crashed"  # scope killed its interpreter(s); no records
+OK = "ok"            # unit ran; doc holds its records (may include errors)
+ERROR = "error"      # unit failed to import/register/run; no usable records
+CRASHED = "crashed"  # unit killed its interpreter(s); no records
+PENDING = "pending"  # planned but not yet executed (manifest only)
+PARTIAL = "partial"  # scope rollup: some instances ok, some not
+
+EXTERNAL = "<external>"   # module marker for add_scope()-registered scopes
 
 
 def _spawn_safe_main() -> bool:
@@ -66,17 +83,27 @@ def _spawn_safe_main() -> bool:
 
 @dataclass
 class OrchestratorOptions:
-    """How to schedule the enabled scopes."""
+    """How to schedule the enabled scopes' benchmarks."""
 
     jobs: int = 1                   # worker parallelism (1 → inline)
     isolate: str = "auto"           # auto | inline | pool | subprocess
+    shard_grain: str = "auto"       # auto | benchmark | scope
     benchmark_filter: str = ".*"
     run: RunOptions = field(default_factory=RunOptions)
     # parsed flag values forwarded to workers (scopes read global FLAGS)
     flag_values: Dict[str, Any] = field(default_factory=dict)
     results_dir: Optional[str] = None   # persist shards+merged when set
     run_id: Optional[str] = None        # defaults to a timestamp
+    resume: bool = False                # re-open results_dir/run_id; skip
+    #                                     instances whose shard is complete
+    cost_source: Optional[str] = None   # prior run dir / GB doc → cost hints
     subprocess_timeout: float = 1800.0
+
+    def grain(self) -> str:
+        if self.shard_grain != "auto":
+            return self.shard_grain
+        # resuming only makes sense against an instance-level manifest
+        return "benchmark" if self.jobs > 1 or self.resume else "scope"
 
     def mode(self) -> str:
         if self.isolate != "auto":
@@ -110,13 +137,45 @@ class ScopeShard:
 
 
 @dataclass
+class InstanceResult:
+    """One benchmark instance's contribution to a plan-grained run."""
+
+    item: PlanItem
+    status: str = PENDING
+    doc: Optional[Dict[str, Any]] = None   # GB-JSON doc for this instance
+    error: str = ""
+    duration_s: float = 0.0
+    started: Optional[float] = None        # epoch seconds (manifest proof
+    finished: Optional[float] = None       #  that --resume didn't re-run)
+    cached: bool = False                   # satisfied from a previous run
+
+    def meta(self) -> Dict[str, Any]:
+        m = {**self.item.meta(), "status": self.status,
+             "shard": f"shards/{self.item.instance_id}.json",
+             "duration_s": round(self.duration_s, 6),
+             "started": self.started, "finished": self.finished}
+        if self.error:
+            m["error"] = self.error[-2000:]
+        if self.cached:
+            m["cached"] = True
+        return m
+
+
+@dataclass
 class RunResult:
-    """Merged document + per-scope shards, as returned by :func:`execute`."""
+    """Merged document + per-scope shards, as returned by :func:`execute`.
+
+    Plan-grained runs additionally expose the plan and the per-instance
+    results (``instances``); per-scope shards are then rollups so
+    scope-grained consumers keep working unchanged.
+    """
 
     doc: Dict[str, Any]
     shards: List[ScopeShard]
     run_id: str
     out_dir: Optional[str] = None
+    plan: Optional[Plan] = None
+    instances: List[InstanceResult] = field(default_factory=list)
 
     def shard(self, scope: str) -> Optional[ScopeShard]:
         for s in self.shards:
@@ -124,9 +183,15 @@ class RunResult:
                 return s
         return None
 
+    def instance(self, name: str) -> Optional[InstanceResult]:
+        for r in self.instances:
+            if r.item.name == name or r.item.instance_id == name:
+                return r
+        return None
+
 
 # ---------------------------------------------------------------------------
-# worker (runs in a fresh interpreter under pool/subprocess isolation)
+# scope-grain worker (runs in a fresh interpreter under pool/subprocess)
 # ---------------------------------------------------------------------------
 
 def run_one_scope(module: str, run_opts: RunOptions, benchmark_filter: str,
@@ -182,7 +247,7 @@ def _pool_worker(module: str, run_opts_dict: Dict[str, Any],
 
 
 # ---------------------------------------------------------------------------
-# execution strategies
+# scope-grain execution strategies
 # ---------------------------------------------------------------------------
 
 def _run_inline(name: str, module: str, registry, opts: OrchestratorOptions
@@ -301,27 +366,43 @@ def _run_pool(items: Sequence[Tuple[str, str]], opts: OrchestratorOptions,
 
 
 # ---------------------------------------------------------------------------
-# merge + persistence
+# merge + persistence (shared)
 # ---------------------------------------------------------------------------
 
-def scope_error_record(shard: ScopeShard) -> Dict[str, Any]:
-    """A schema-conforming GB record marking a failed/crashed scope."""
+def _gb_error_record(name: str, status: str, error: str) -> Dict[str, Any]:
     return {
-        "name": f"{shard.scope}/SCOPE_FAILED",
-        "run_name": f"{shard.scope}/SCOPE_FAILED",
+        "name": name,
+        "run_name": name,
         "run_type": "iteration",
         "repetitions": 1, "repetition_index": 0, "threads": 1,
         "iterations": 0, "real_time": 0.0, "cpu_time": 0.0,
         "time_unit": "us",
         "error_occurred": True,
-        "error_message": f"[{shard.status}] {shard.error}".strip(),
+        "error_message": f"[{status}] {error}".strip(),
     }
+
+
+def scope_error_record(shard: ScopeShard) -> Dict[str, Any]:
+    """A schema-conforming GB record marking a failed/crashed scope."""
+    return _gb_error_record(f"{shard.scope}/SCOPE_FAILED", shard.status,
+                            shard.error)
+
+
+def instance_error_record(name: str, status: str, error: str
+                          ) -> Dict[str, Any]:
+    """A schema-conforming GB record for one failed/crashed instance.
+
+    Unlike a scope failure, the record keeps the *instance's own name* —
+    siblings in the same scope report normally, and baseline comparison
+    attributes the failure to exactly the benchmark that died.
+    """
+    return _gb_error_record(name, status, error)
 
 
 def merge_shards(shards: Sequence[ScopeShard],
                  context_extra: Optional[Dict[str, Any]] = None,
                  run_id: Optional[str] = None) -> Dict[str, Any]:
-    """Concatenate shard documents into one GB-JSON document.
+    """Concatenate scope shard documents into one GB-JSON document.
 
     Top-level schema is identical to the sequential
     :func:`~repro.core.runner.run_benchmarks` output (``context`` +
@@ -344,12 +425,424 @@ def default_run_id() -> str:
     return time.strftime("%Y%m%dT%H%M%S") + f"-{os.getpid()}"
 
 
+def _atomic_write_json(doc: Dict[str, Any], path: str) -> None:
+    """Write-then-rename so crash-time readers never see a torn file."""
+    tmp = path + ".tmp"
+    write_json(doc, tmp)
+    os.replace(tmp, path)
+
+
 def _persist_shard(out_dir: str, shard: ScopeShard) -> None:
     doc = shard.doc if shard.status == OK and shard.doc is not None else {
         "context": {"scope": shard.scope, **shard.meta()},
         "benchmarks": [scope_error_record(shard)],
     }
     write_json(doc, os.path.join(out_dir, f"{shard.scope}.json"))
+
+
+# ---------------------------------------------------------------------------
+# plan-grain: manifest + instance shards
+# ---------------------------------------------------------------------------
+
+def manifest_path(out_dir: str) -> str:
+    return os.path.join(out_dir, "manifest.json")
+
+
+def read_manifest(out_dir: str) -> Dict[str, Any]:
+    with open(manifest_path(out_dir)) as f:
+        return json.load(f)
+
+
+def write_manifest(out_dir: str, run_id: str, plan: Plan,
+                   results: Dict[str, InstanceResult]) -> None:
+    """Record plan → shard status, rewritten as instances complete."""
+    items = []
+    for item in plan.items:
+        r = results.get(item.instance_id)
+        if r is not None:
+            items.append(r.meta())
+        else:
+            items.append({**item.meta(), "status": PENDING,
+                          "shard": f"shards/{item.instance_id}.json"})
+    _atomic_write_json({
+        "run_id": run_id,
+        "grain": "benchmark",
+        "total": len(plan.items),
+        "completed": sum(1 for r in results.values() if r.status == OK),
+        "items": items,
+    }, manifest_path(out_dir))
+
+
+def _instance_shard_file(spool: str, item: PlanItem) -> str:
+    return os.path.join(spool, f"{item.instance_id}.json")
+
+
+def _write_instance_shard(spool: str, res: InstanceResult) -> None:
+    doc = res.doc if res.doc is not None else {
+        "context": {},
+        "benchmarks": [instance_error_record(res.item.name, res.status,
+                                             res.error)],
+    }
+    doc.setdefault("context", {})["instance"] = res.meta()
+    _atomic_write_json(doc, _instance_shard_file(spool, res.item))
+
+
+def _load_instance_shard(spool: str, item: PlanItem
+                         ) -> Optional[InstanceResult]:
+    """Read one instance's spool shard; None if absent or torn."""
+    path = _instance_shard_file(spool, item)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    meta = doc.get("context", {}).get("instance", {})
+    return InstanceResult(
+        item=item, status=meta.get("status", OK), doc=doc,
+        error=meta.get("error", ""),
+        duration_s=meta.get("duration_s", 0.0),
+        started=meta.get("started"), finished=meta.get("finished"))
+
+
+# ---------------------------------------------------------------------------
+# plan-grain: execution
+# ---------------------------------------------------------------------------
+
+def _instance_status(doc: Dict[str, Any]) -> Tuple[str, str]:
+    """(status, error) from a freshly-run instance document.
+
+    An instance whose every record errored is an ERROR result — it will
+    be re-attempted by ``--resume`` — while partial/record-level errors
+    (e.g. one repetition skipped) leave the instance OK, matching
+    scope-grain semantics.
+    """
+    recs = doc.get("benchmarks", [])
+    if recs and all(r.get("error_occurred") for r in recs):
+        return ERROR, str(recs[0].get("error_message") or "")
+    return OK, ""
+
+
+def _run_instance_inline(item: PlanItem, registry,
+                         opts: OrchestratorOptions) -> InstanceResult:
+    """Run one plan item in-process against the parent's registry."""
+    started = time.time()
+    t0 = time.perf_counter()
+    try:
+        bench = registry.get(item.family)
+        doc = run_single_instance([bench], item.name, opts.run)
+        status, error = _instance_status(doc)
+    except Exception:  # noqa: BLE001 - isolation requirement
+        status, error = ERROR, traceback.format_exc(limit=4)
+        doc = {"context": {},
+               "benchmarks": [instance_error_record(item.name, status,
+                                                    error)]}
+    return InstanceResult(item, status, doc, error,
+                          duration_s=time.perf_counter() - t0,
+                          started=started, finished=time.time())
+
+
+def run_plan_items(items_meta: Sequence[Dict[str, Any]],
+                   run_opts: RunOptions,
+                   flag_values: Optional[Dict[str, Any]],
+                   spool: str) -> int:
+    """Worker body: run a bin of plan items, streaming instance shards.
+
+    Loads every scope module the bin references once (imports are the
+    expensive part — JAX — so instances are batched per worker, not
+    spawned one interpreter each), then executes the items in plan order,
+    writing ``<spool>/<instance_id>.json`` after each.  A Python-level
+    failure degrades that instance to an error shard and the worker keeps
+    going; only interpreter death stops the stream — the parent then
+    narrows the gap down via solo retries.
+    """
+    from .flags import FLAGS
+    from .hooks import HOOKS
+    from .registry import REGISTRY
+    from .scope import ScopeManager
+
+    REGISTRY.reset()
+    mgr = ScopeManager()
+    modules: List[str] = []
+    for m in items_meta:
+        if m["module"] not in modules:
+            modules.append(m["module"])
+    mgr.load(modules)
+    for name, value in (flag_values or {}).items():
+        FLAGS.set(name, value)
+    rc = HOOKS.run_pre_parse()
+    if rc is None:
+        rc = HOOKS.run_post_parse()
+    init_error = f"init hook requested exit ({rc})" if rc is not None else ""
+    if not init_error:
+        mgr.register_all()
+    unavailable = {s.scope.name: s.error for s in mgr.scopes()
+                   if not s.available}
+
+    for m in items_meta:
+        item = PlanItem.from_meta(m)
+        started = time.time()
+        t0 = time.perf_counter()
+        try:
+            if init_error:
+                raise RuntimeError(init_error)
+            if item.scope in unavailable:
+                raise RuntimeError(f"scope {item.scope} unavailable in "
+                                   f"worker:\n{unavailable[item.scope]}")
+            bench = REGISTRY.get(item.family)
+            doc = run_single_instance([bench], item.name, run_opts)
+            status, error = _instance_status(doc)
+        except Exception:  # noqa: BLE001 - isolate instance failures
+            status, error = ERROR, traceback.format_exc(limit=4)
+            doc = {"context": {},
+                   "benchmarks": [instance_error_record(item.name, status,
+                                                        error)]}
+        res = InstanceResult(item, status, doc, error,
+                             duration_s=time.perf_counter() - t0,
+                             started=started, finished=time.time())
+        _write_instance_shard(spool, res)
+    return 0
+
+
+def _spawn_plan_worker(items: Sequence[PlanItem], spool: str,
+                       opts: OrchestratorOptions) -> Tuple[int, str]:
+    """Run a bin of items in a standalone interpreter; (returncode, stderr).
+
+    Results travel through the spool directory, not the return value, so
+    a worker that dies mid-bin still leaves every finished instance's
+    shard behind.
+    """
+    fd, items_file = tempfile.mkstemp(suffix=".items", dir=spool)
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump([i.meta() for i in items], f)
+        cmd = [sys.executable, "-m", "repro.core.orchestrate",
+               "--worker-plan", "--items-json", items_file,
+               "--spool", spool,
+               "--run-json", json.dumps(asdict(opts.run)),
+               "--flags-json", json.dumps(opts.flag_values)]
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=opts.subprocess_timeout)
+        except subprocess.TimeoutExpired:
+            return -9, f"timed out after {opts.subprocess_timeout}s"
+        return proc.returncode, proc.stderr or ""
+    finally:
+        try:
+            os.unlink(items_file)
+        except OSError:
+            pass
+
+
+def _run_bin(bin_items: Sequence[PlanItem], spool: str,
+             opts: OrchestratorOptions) -> Dict[str, InstanceResult]:
+    """Execute one worker bin; recover per-instance from worker death.
+
+    If the batch interpreter dies, finished instances are recovered from
+    the spool and each missing one is retried in its own interpreter —
+    the instance that kills its solo worker too is marked CRASHED, its
+    bin-mates all still report.
+    """
+    rc, stderr = _spawn_plan_worker(bin_items, spool, opts)
+    out: Dict[str, InstanceResult] = {}
+    missing: List[PlanItem] = []
+    for item in bin_items:
+        res = _load_instance_shard(spool, item)
+        if res is not None:
+            out[item.instance_id] = res
+        else:
+            missing.append(item)
+    if missing and len(bin_items) > 1:
+        log.warning("plan worker died (exit %s); retrying %d instance(s) "
+                    "solo: %s", rc, len(missing),
+                    [i.name for i in missing])
+    for item in missing:
+        if len(bin_items) > 1:
+            rc, stderr = _spawn_plan_worker([item], spool, opts)
+            res = _load_instance_shard(spool, item)
+            if res is not None:
+                out[item.instance_id] = res
+                continue
+        now = time.time()
+        res = InstanceResult(
+            item, CRASHED, None,
+            error=f"worker exited {rc}:\n{stderr[-2000:]}",
+            started=now, finished=now)
+        _write_instance_shard(spool, res)
+        # re-read so doc/meta match what a resume would reconstruct
+        out[item.instance_id] = _load_instance_shard(spool, item) or res
+    return out
+
+
+def merge_plan(plan: Plan, results: Dict[str, InstanceResult],
+               context_extra: Optional[Dict[str, Any]] = None,
+               run_id: Optional[str] = None,
+               rollups: Optional[List[ScopeShard]] = None
+               ) -> Dict[str, Any]:
+    """Merge instance results into one GB-JSON document, in *plan order*.
+
+    Plan order — not completion order — is what makes the merged document
+    deterministic across ``--jobs`` and bin assignments: it is identical,
+    benchmark for benchmark, to an inline scope-grained run.  The plan
+    enumerates scope by scope, so concatenating the per-scope rollups
+    (pass precomputed ``rollups`` to avoid rebuilding them) *is* plan
+    order.
+    """
+    rollups = _scope_rollups(plan, results) if rollups is None else rollups
+    ctx = build_context(context_extra)
+    if run_id:
+        ctx["run_id"] = run_id
+    ctx["shard_grain"] = "benchmark"
+    ctx["shards"] = [r.meta() for r in rollups]
+    ctx["instances"] = [
+        results[i.instance_id].meta() if i.instance_id in results
+        else {**i.meta(), "status": PENDING}
+        for i in plan.items
+    ]
+    benchmarks: List[Dict[str, Any]] = []
+    for shard in rollups:
+        benchmarks.extend(shard.doc.get("benchmarks", []))
+    return {"context": ctx, "benchmarks": benchmarks}
+
+
+def _scope_rollups(plan: Plan, results: Dict[str, InstanceResult]
+                   ) -> List[ScopeShard]:
+    """Per-scope ScopeShard views over instance results.
+
+    Keeps scope-grained consumers (benchmarks/run.py, ScopePlot's
+    ``shards()``) working on plan-grained runs: ``ok`` when every
+    instance succeeded, ``partial`` when some did, ``error``/``crashed``
+    when none did.
+    """
+    shards: List[ScopeShard] = []
+    for scope in plan.scopes():
+        scope_items = [i for i in plan.items if i.scope == scope]
+        rs = [results.get(i.instance_id) for i in scope_items]
+        statuses = [r.status if r is not None else PENDING for r in rs]
+        n_ok = sum(1 for s in statuses if s == OK)
+        if n_ok == len(statuses):
+            status = OK
+        elif n_ok:
+            status = PARTIAL
+        elif CRASHED in statuses:
+            status = CRASHED
+        else:
+            status = ERROR
+        benchmarks: List[Dict[str, Any]] = []
+        for item, r in zip(scope_items, rs):
+            if r is not None and r.doc is not None:
+                benchmarks.extend(r.doc.get("benchmarks", []))
+            else:
+                benchmarks.append(instance_error_record(
+                    item.name, r.status if r else PENDING,
+                    r.error if r else "never executed"))
+        error = "; ".join(
+            f"{i.name}: {r.error.strip().splitlines()[-1]}"
+            for i, r in zip(scope_items, rs)
+            if r is not None and r.status != OK and r.error)[:2000]
+        shards.append(ScopeShard(
+            scope, scope_items[0].module, status,
+            {"context": {"scope": scope}, "benchmarks": benchmarks},
+            error=error,
+            duration_s=sum(r.duration_s for r in rs if r is not None)))
+    return shards
+
+
+def _execute_plan_grain(mgr, registry, opts: OrchestratorOptions,
+                        context_extra: Optional[Dict[str, Any]] = None
+                        ) -> RunResult:
+    """Benchmark-grained execution: plan → LPT bins → shards → merge."""
+    cost_hints: Dict[str, float] = {}
+    if opts.cost_source:
+        try:
+            cost_hints = load_cost_hints(opts.cost_source)
+        except (OSError, json.JSONDecodeError) as e:
+            log.warning("cost source %s unreadable (%s); planning without "
+                        "hints", opts.cost_source, e)
+    plan = build_plan(mgr, registry, opts.benchmark_filter,
+                      cost_hints=cost_hints)
+    run_id = opts.run_id or default_run_id()
+    out_dir = None
+    if opts.results_dir:
+        out_dir = os.path.join(opts.results_dir, run_id)
+    if opts.resume and (out_dir is None or not os.path.isdir(out_dir)):
+        raise FileNotFoundError(
+            f"--resume {run_id}: no run directory "
+            f"{out_dir or '(need --results-dir)'}")
+
+    spool_tmp = None
+    if out_dir:
+        spool = os.path.join(out_dir, "shards")
+        os.makedirs(spool, exist_ok=True)
+    else:
+        spool = spool_tmp = tempfile.mkdtemp(prefix="repro-spool-")
+
+    try:
+        results: Dict[str, InstanceResult] = {}
+        if opts.resume:
+            # shard files are the source of truth — an orchestrator killed
+            # between a worker's shard write and the next manifest rewrite
+            # must not re-run that instance
+            for item in plan.items:
+                res = _load_instance_shard(spool, item)
+                if res is not None and res.status == OK:
+                    res.cached = True
+                    results[item.instance_id] = res
+            log.info("resume %s: %d/%d instance(s) already complete",
+                     run_id, len(results), len(plan.items))
+        pending = [i for i in plan.items if i.instance_id not in results]
+
+        if out_dir:
+            write_manifest(out_dir, run_id, plan, results)
+
+        def on_result(res: InstanceResult) -> None:
+            results[res.item.instance_id] = res
+            log.info("instance %s: %s (%.2fs)", res.item.name, res.status,
+                     res.duration_s)
+            if out_dir:
+                write_manifest(out_dir, run_id, plan, results)
+
+        mode = opts.mode()
+        # external scopes (add_scope, no importable module) can't be
+        # re-imported by a worker — they always run inline in the parent
+        inline_items = [i for i in pending
+                        if mode == "inline" or i.module == EXTERNAL]
+        worker_items = [i for i in pending if i not in inline_items]
+
+        if worker_items:
+            bins = plan.bins(opts.jobs, worker_items)
+            log.info("scheduling %d instance(s) across %d worker bin(s) "
+                     "(LPT, predicted makespan %.2fs)",
+                     len(worker_items), len(bins),
+                     max(sum(plan.cost_of(i) for i in b) for b in bins))
+            with ThreadPoolExecutor(max_workers=max(1, opts.jobs)) as tp:
+                futs = [tp.submit(_run_bin, b, spool, opts) for b in bins]
+                for fut in as_completed(futs):
+                    for res in fut.result().values():
+                        on_result(res)
+        for item in inline_items:
+            res = _run_instance_inline(item, registry, opts)
+            if out_dir:
+                _write_instance_shard(spool, res)
+            on_result(res)
+
+        shards = _scope_rollups(plan, results)
+        doc = merge_plan(plan, results, context_extra=context_extra,
+                         run_id=run_id, rollups=shards)
+        if out_dir:
+            write_json(doc, os.path.join(out_dir, "merged.json"))
+            log.info("wrote %s (%d records from %d instances)",
+                     os.path.join(out_dir, "merged.json"),
+                     len(doc["benchmarks"]), len(plan.items))
+        return RunResult(doc=doc, shards=shards, run_id=run_id,
+                         out_dir=out_dir, plan=plan,
+                         instances=[results[i.instance_id]
+                                    for i in plan.items
+                                    if i.instance_id in results])
+    finally:
+        if spool_tmp:
+            shutil.rmtree(spool_tmp, ignore_errors=True)
 
 
 # ---------------------------------------------------------------------------
@@ -360,12 +853,22 @@ def execute(mgr, registry, opts: OrchestratorOptions,
             context_extra: Optional[Dict[str, Any]] = None) -> RunResult:
     """Run every enabled scope of ``mgr`` under ``opts``; merge the shards.
 
-    ``mgr`` must already be loaded/configured; for inline mode it must
-    also be registered (``mgr.register_all()``).  External scopes (added
-    with ``add_scope``, no importable module) always run inline — a
-    worker cannot re-import them.
+    ``mgr`` must already be loaded/configured *and registered*
+    (``mgr.register_all()``) — plan construction enumerates the registry.
+    ``opts.grain()`` picks the schedulable unit: benchmark instances
+    (:func:`_execute_plan_grain`) or whole scopes.  External scopes
+    (added with ``add_scope``, no importable module) always run inline —
+    a worker cannot re-import them.
     """
-    items = mgr.dispatchable()
+    if opts.grain() == "benchmark":
+        return _execute_plan_grain(mgr, registry, opts, context_extra)
+    if opts.resume:
+        # silently re-running everything would invalidate the manifest
+        # timestamps resume exists to preserve
+        raise ValueError("--resume requires benchmark shard grain "
+                         "(drop --shard-grain scope)")
+
+    items = scope_worklist(mgr)
     run_id = opts.run_id or default_run_id()
     out_dir = None
     if opts.results_dir:
@@ -381,8 +884,8 @@ def execute(mgr, registry, opts: OrchestratorOptions,
             _persist_shard(out_dir, shard)
 
     mode = opts.mode()
-    parallel_items = [(n, m) for n, m in items if m != "<external>"]
-    inline_items = [(n, m) for n, m in items if m == "<external>"]
+    parallel_items = [(n, m) for n, m in items if m != EXTERNAL]
+    inline_items = [(n, m) for n, m in items if m == EXTERNAL]
     if mode == "inline":
         inline_items, parallel_items = items, []
 
@@ -415,18 +918,36 @@ def execute(mgr, registry, opts: OrchestratorOptions,
 
 
 # ---------------------------------------------------------------------------
-# standalone worker CLI (the subprocess-isolation entry)
+# standalone worker CLI (the subprocess-isolation entries)
 # ---------------------------------------------------------------------------
 
 def _worker_main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.core.orchestrate")
-    ap.add_argument("--worker", action="store_true", required=True)
-    ap.add_argument("--module", required=True)
-    ap.add_argument("--out", required=True)
+    ap.add_argument("--worker", action="store_true",
+                    help="scope-grain worker: run one scope module")
+    ap.add_argument("--worker-plan", action="store_true",
+                    help="plan-grain worker: run a bin of instances")
+    ap.add_argument("--module", help="[--worker] scope module to run")
+    ap.add_argument("--out", help="[--worker] output document path")
+    ap.add_argument("--items-json",
+                    help="[--worker-plan] JSON file of plan-item metas")
+    ap.add_argument("--spool",
+                    help="[--worker-plan] instance-shard output directory")
     ap.add_argument("--filter", default=".*")
     ap.add_argument("--run-json", default="{}")
     ap.add_argument("--flags-json", default="{}")
     ns = ap.parse_args(argv)
+
+    if ns.worker_plan:
+        if not (ns.items_json and ns.spool):
+            ap.error("--worker-plan requires --items-json and --spool")
+        with open(ns.items_json) as f:
+            items = json.load(f)
+        return run_plan_items(items, RunOptions(**json.loads(ns.run_json)),
+                              json.loads(ns.flags_json), ns.spool)
+
+    if not (ns.worker and ns.module and ns.out):
+        ap.error("need --worker with --module/--out, or --worker-plan")
     try:
         doc = run_one_scope(ns.module,
                             RunOptions(**json.loads(ns.run_json)),

@@ -9,7 +9,10 @@ Reimplements the run stage of the SCOPE binary (paper Fig. 2(d)):
   * repetitions with mean/median/stddev aggregate records;
   * results serialized in the Google Benchmark JSON schema (``context`` +
     ``benchmarks[]``), unmodified counters inlined per record — the property
-    that makes ScopePlot "compatible with other tools that use that library".
+    that makes ScopePlot "compatible with other tools that use that library";
+  * two execution granularities: :func:`run_benchmarks` sweeps whole
+    families, :func:`run_single_instance` runs exactly one named instance —
+    the unit the plan-grained orchestrator (repro.core.plan) schedules.
 """
 from __future__ import annotations
 
@@ -185,6 +188,38 @@ def _error_record(bench: Benchmark, name: str, st: State, reps: int,
         error_occurred=st.error_occurred, error_message=st.error_message or None,
         skipped=st.skipped, skip_message=st.skip_message or None,
     )
+
+
+def run_single_instance(benches: Sequence[Benchmark], instance_name: str,
+                        opts: Optional[RunOptions] = None,
+                        context_extra: Optional[Dict[str, Any]] = None
+                        ) -> Dict[str, Any]:
+    """Run exactly one *named* instance; return a full GB-JSON document.
+
+    The plan-grained orchestrator's unit of work (repro.core.plan):
+    ``instance_name`` is a Google-Benchmark display name
+    (``scope/family/arg0/...``), matched against every instance of
+    ``benches``.  Crashes degrade to an error record, like
+    :func:`run_benchmarks`; an unknown name raises ``KeyError`` so the
+    caller can tell "no such instance" apart from "instance failed".
+    """
+    opts = opts or RunOptions()
+    for bench in benches:
+        for name, arg_set in bench.instances():
+            if name != instance_name:
+                continue
+            try:
+                records = run_instance(bench, arg_set, opts)
+            except Exception as e:  # noqa: BLE001 - isolate benchmark crashes
+                log.error("benchmark %s crashed: %s", name, e)
+                st = State()
+                st.skip_with_error(f"crashed: {e}")
+                records = [_error_record(bench, name, st, 1)]
+            return {
+                "context": build_context(context_extra),
+                "benchmarks": [r.to_json() for r in records],
+            }
+    raise KeyError(f"no benchmark instance named {instance_name!r}")
 
 
 def run_benchmarks(benches: Sequence[Benchmark],

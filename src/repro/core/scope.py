@@ -14,13 +14,20 @@ preserving the three design goals:
     is marked unavailable rather than breaking the binary;
   * development silos — scopes never import each other; shared code lives
     only in ``repro.core``.
+
+The manager stops at configuration: it loads, enables/disables, and
+registers scopes, then hands off.  *Scheduling* is the work-plan layer's
+job — :func:`repro.core.plan.build_plan` enumerates a configured manager's
+registry into addressable benchmark instances and
+:func:`repro.core.plan.scope_worklist` derives the scope-grained work list;
+the orchestrator consumes whichever granularity ``--shard-grain`` selects.
 """
 from __future__ import annotations
 
 import importlib
 import traceback
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 from .flags import FLAGS, FlagRegistry
 from .hooks import HOOKS, HookChain
@@ -122,13 +129,20 @@ class ScopeManager:
                   disable: Optional[List[str]] = None) -> None:
         if enable:
             only = set(enable)
-            unknown = only - set(self._scopes)
+            known = only & set(self._scopes)
+            unknown = only - known
             if unknown:
                 log.warning("--enable-scope names no loaded scope: %s "
                             "(have %s)", sorted(unknown),
                             sorted(self._scopes))
-            for s in self._scopes.values():
-                s.enabled = s.scope.name in only
+            if known:
+                for s in self._scopes.values():
+                    s.enabled = s.scope.name in known
+            else:
+                # every name was unknown — a typo must not silently
+                # disable the whole binary; leave the selection unchanged
+                log.warning("--enable-scope selected nothing; scope "
+                            "enablement left unchanged")
         for name in disable or []:
             self.set_enabled(name, False)
 
@@ -148,17 +162,6 @@ class ScopeManager:
     # -- introspection ------------------------------------------------
     def scopes(self) -> List[_LoadedScope]:
         return list(self._scopes.values())
-
-    def dispatchable(self) -> List[Tuple[str, str]]:
-        """(name, module) pairs for every enabled+available scope.
-
-        This is the orchestrator's work list (repro.core.orchestrate):
-        module names are re-imported by pool/subprocess workers; scopes
-        added via :meth:`add_scope` carry module ``"<external>"`` and are
-        run inline by the orchestrator instead.
-        """
-        return [(s.scope.name, s.module) for s in self._scopes.values()
-                if s.enabled and s.available]
 
     def status(self) -> Dict[str, str]:
         return {

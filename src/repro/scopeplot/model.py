@@ -201,18 +201,21 @@ class BenchmarkFile:
 def load(path) -> BenchmarkFile:
     """Load a GB-JSON document, or an orchestrator run directory
     (``results/<run-id>/``): its ``merged.json`` when present, else the
-    structure-preserving :func:`cat` of every per-scope shard in it."""
+    structure-preserving :func:`cat` of every shard in it.  Both
+    scope-grained (``<scope>.json``) and benchmark-grained
+    (``shards/<instance>.json``, ordered by ``manifest.json``) run
+    directories load the same way."""
     import os
     if os.path.isdir(path):
         merged = os.path.join(path, "merged.json")
         if os.path.exists(merged):
             path = merged
         else:
-            shards = sorted(f for f in os.listdir(path)
-                            if f.endswith(".json"))
+            from repro.core.baseline import run_dir_shard_files
+            shards = run_dir_shard_files(path)
             if not shards:
                 raise FileNotFoundError(f"no result JSON in {path}")
-            return cat([load(os.path.join(path, f)) for f in shards])
+            return cat([load(p) for p in shards])
     with open(path) as f:
         return BenchmarkFile.from_dict(json.load(f))
 

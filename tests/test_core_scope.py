@@ -43,6 +43,19 @@ def test_enable_only():
     assert mgr.status() == {"a": "disabled", "b": "enabled"}
 
 
+def test_enable_only_unknown_names_leaves_selection_unchanged():
+    """--enable-scope with nothing but typos must not disable every scope
+    — the selection stays as it was (with a warning)."""
+    mgr = make_mgr()
+    for n in "ab":
+        mgr.add_scope(Scope(name=n))
+    mgr.configure(enable=["nope", "also_nope"])
+    assert mgr.status() == {"a": "enabled", "b": "enabled"}
+    # a mix of known and unknown names enables the known ones only
+    mgr.configure(enable=["b", "nope"])
+    assert mgr.status() == {"a": "disabled", "b": "enabled"}
+
+
 def test_flags_and_hooks_two_phase():
     calls = []
     flags = FlagRegistry()

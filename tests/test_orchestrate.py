@@ -1,6 +1,6 @@
-"""Run orchestrator: parallel/sequential equivalence, crash isolation,
-shard merging, and baseline-compare verdicts (repro.core.orchestrate /
-repro.core.baseline)."""
+"""Run orchestrator: parallel/sequential equivalence at both shard
+grains, crash isolation, manifest + resume, shard merging, and
+baseline-compare verdicts (repro.core.orchestrate / repro.core.baseline)."""
 import json
 import os
 import textwrap
@@ -11,7 +11,7 @@ from repro.core import baseline as bl
 from repro.core.flags import FlagRegistry
 from repro.core.hooks import HookChain
 from repro.core.orchestrate import (OrchestratorOptions, ScopeShard,
-                                    execute, merge_shards,
+                                    execute, merge_shards, read_manifest,
                                     scope_error_record)
 from repro.core.registry import BenchmarkRegistry
 from repro.core.runner import RunOptions, run_benchmarks
@@ -58,8 +58,8 @@ def test_inline_merged_matches_sequential_runner():
 
 @pytest.mark.slow
 def test_parallel_subprocess_matches_inline(monkeypatch, tmp_path):
-    """--jobs 2 subprocess-isolated run: same names/schema as inline,
-    shards persisted under results/<run-id>/."""
+    """--jobs 2 scope-grained subprocess run: same names/schema as
+    inline, per-scope shards persisted under results/<run-id>/."""
     _ensure_src_on_child_path(monkeypatch)
     mgr = make_mgr(["repro.scopes.example_scope",
                     "repro.scopes.instr_scope"])
@@ -67,7 +67,7 @@ def test_parallel_subprocess_matches_inline(monkeypatch, tmp_path):
                      OrchestratorOptions(jobs=1, run=FAST))
     par = execute(mgr, mgr.registry,
                   OrchestratorOptions(jobs=2, isolate="subprocess",
-                                      run=FAST,
+                                      shard_grain="scope", run=FAST,
                                       results_dir=str(tmp_path),
                                       run_id="t1"))
     assert [s.status for s in par.shards] == ["ok", "ok"]
@@ -123,7 +123,7 @@ def test_crash_isolation_subprocess(monkeypatch, tmp_path):
     mgr = make_mgr(["repro.scopes.example_scope", "crashy_scope"])
     res = execute(mgr, mgr.registry,
                   OrchestratorOptions(jobs=2, isolate="subprocess",
-                                      run=FAST))
+                                      shard_grain="scope", run=FAST))
     by = {s.scope: s for s in res.shards}
     assert by["example"].status == "ok"
     assert by["crashy"].status == "crashed"
@@ -174,7 +174,8 @@ def test_crash_breaks_pool_but_run_recovers(monkeypatch, tmp_path):
     _ensure_src_on_child_path(monkeypatch, extra=tmp_path)
     mgr = make_mgr(["repro.scopes.example_scope", "crashy_scope"])
     res = execute(mgr, mgr.registry,
-                  OrchestratorOptions(jobs=2, isolate="pool", run=FAST))
+                  OrchestratorOptions(jobs=2, isolate="pool",
+                                      shard_grain="scope", run=FAST))
     by = {s.scope: s for s in res.shards}
     assert set(by) == {"example", "crashy"}
     assert by["example"].status == "ok"
@@ -211,6 +212,206 @@ def test_scope_error_record_schema_matches_runner():
         assert key in rec
     assert rec["error_occurred"] is True
     assert "boom" in rec["error_message"]
+
+
+# ---------------------------------------------------------------------------
+# benchmark grain: plan scheduling, manifest, resume, instance isolation
+# ---------------------------------------------------------------------------
+
+def _names(doc):
+    return [r["name"] for r in doc["benchmarks"]]
+
+
+def _schemas(doc):
+    return [frozenset(r) for r in doc["benchmarks"]]
+
+
+def test_plan_grain_inline_matches_scope_grain(tmp_path):
+    """--shard-grain benchmark produces a merged document benchmark-for-
+    benchmark equivalent to a scope-grained inline run, with per-instance
+    shards + a complete manifest under results/<run-id>/."""
+    mgr = make_mgr(["repro.scopes.example_scope"])
+    scope_run = execute(mgr, mgr.registry,
+                        OrchestratorOptions(jobs=1, run=FAST))
+    plan_run = execute(mgr, mgr.registry,
+                       OrchestratorOptions(jobs=1, shard_grain="benchmark",
+                                           run=FAST,
+                                           results_dir=str(tmp_path),
+                                           run_id="p1"))
+    assert _names(plan_run.doc) == _names(scope_run.doc)
+    assert _schemas(plan_run.doc) == _schemas(scope_run.doc)
+    # per-instance persistence: shards/<id>.json for every plan item
+    out = tmp_path / "p1"
+    assert (out / "merged.json").exists()
+    shard_files = sorted(p.name for p in (out / "shards").iterdir()
+                         if p.suffix == ".json")
+    assert len(shard_files) == len(plan_run.plan.items)
+    manifest = read_manifest(str(out))
+    assert manifest["run_id"] == "p1"
+    assert manifest["grain"] == "benchmark"
+    assert manifest["completed"] == manifest["total"] == \
+        len(plan_run.plan.items)
+    assert [e["name"] for e in manifest["items"]] == \
+        [i.name for i in plan_run.plan.items]
+    assert all(e["status"] == "ok" and e["finished"] is not None
+               for e in manifest["items"])
+    # per-scope rollups keep scope-grained consumers working
+    assert [(s.scope, s.status) for s in plan_run.shards] == \
+        [("example", "ok")]
+    merged = json.loads((out / "merged.json").read_text())
+    assert [s["status"] for s in merged["context"]["shards"]] == ["ok"]
+
+    # scopeplot + baseline read the instance-sharded run directory
+    from repro.scopeplot import load
+    assert [r.name for r in load(str(out))] == _names(plan_run.doc)
+    (out / "merged.json").unlink()      # interrupted-run view
+    assert _names(bl.load_document(str(out))) == _names(plan_run.doc)
+    assert [r.name for r in load(str(out))] == _names(plan_run.doc)
+
+
+def test_resume_skips_completed_instances(tmp_path):
+    """--resume re-runs only instances whose shard is missing/failed;
+    finished instances keep their manifest timestamps (proof they were
+    not re-executed)."""
+    mgr = make_mgr(["repro.scopes.example_scope"])
+    opts = OrchestratorOptions(jobs=1, shard_grain="benchmark", run=FAST,
+                               results_dir=str(tmp_path), run_id="r1")
+    first = execute(mgr, mgr.registry, opts)
+    out = tmp_path / "r1"
+    before = {e["name"]: e for e in read_manifest(str(out))["items"]}
+
+    # simulate an interruption: one instance never finished
+    victim = first.plan.items[2]
+    (out / "shards" / f"{victim.instance_id}.json").unlink()
+    (out / "merged.json").unlink()
+
+    opts.resume = True
+    second = execute(mgr, mgr.registry, opts)
+    after = {e["name"]: e for e in read_manifest(str(out))["items"]}
+    for name, entry in after.items():
+        if name == victim.name:
+            assert entry["finished"] > before[name]["finished"]
+            assert not entry.get("cached")
+        else:
+            assert entry["finished"] == before[name]["finished"]
+            assert entry.get("cached")
+    # the resumed merged document is complete and in plan order
+    assert _names(second.doc) == _names(first.doc)
+    assert _schemas(second.doc) == _schemas(first.doc)
+    assert (out / "merged.json").exists()
+
+
+INSTANCE_CRASHY = textwrap.dedent("""
+    import os
+    from repro.core import Scope, State, benchmark
+
+    NAME = "crashy"
+
+    def _register(registry):
+        @benchmark(scope=NAME, registry=registry)
+        def ok_before(state: State):
+            while state.keep_running():
+                pass
+
+        @benchmark(scope=NAME, registry=registry)
+        def die(state: State):
+            if state.range(0) == 2:
+                os._exit(42)
+            while state.keep_running():
+                pass
+        die.range_multiplier_args(1, 4)
+
+        @benchmark(scope=NAME, registry=registry)
+        def ok_after(state: State):
+            while state.keep_running():
+                pass
+
+    SCOPE = Scope(name=NAME, register=_register)
+""")
+
+
+@pytest.mark.slow
+def test_instance_crash_degrades_only_itself(monkeypatch, tmp_path):
+    """Benchmark grain: an interpreter-killing *instance* yields an error
+    record for that instance only — its family and scope siblings still
+    report real records (scope grain would have lost the whole scope)."""
+    # distinct module name: other tests import their own crashy_scope and
+    # the parent process's module cache would serve the stale one
+    (tmp_path / "instance_crashy_scope.py").write_text(INSTANCE_CRASHY)
+    monkeypatch.syspath_prepend(str(tmp_path))
+    _ensure_src_on_child_path(monkeypatch, extra=tmp_path)
+    mgr = make_mgr(["instance_crashy_scope"])
+    res = execute(mgr, mgr.registry,
+                  OrchestratorOptions(jobs=2, isolate="subprocess",
+                                      shard_grain="benchmark", run=FAST))
+    by = {r.item.name: r for r in res.instances}
+    assert by["crashy/die/2"].status == "crashed"
+    assert "42" in by["crashy/die/2"].error
+    for name in ("crashy/ok_before", "crashy/die/1", "crashy/die/4",
+                 "crashy/ok_after"):
+        assert by[name].status == "ok"
+    recs = {r["name"]: r for r in res.doc["benchmarks"]}
+    assert recs["crashy/die/2"]["error_occurred"]
+    assert not recs["crashy/ok_after"].get("error_occurred")
+    # the scope rolls up as partial, not failed
+    assert [(s.scope, s.status) for s in res.shards] == \
+        [("crashy", "partial")]
+
+
+@pytest.mark.slow
+def test_merge_determinism_across_grains_and_resume(monkeypatch, tmp_path):
+    """merged.json benchmark names/order/schema are identical across
+    --jobs 1 --isolate inline, --jobs 4 --shard-grain benchmark, and a
+    resumed run (the ISSUE's merge-determinism contract)."""
+    _ensure_src_on_child_path(monkeypatch)
+    mgr = make_mgr(["repro.scopes.example_scope",
+                    "repro.scopes.instr_scope"])
+    inline = execute(mgr, mgr.registry,
+                     OrchestratorOptions(jobs=1, isolate="inline",
+                                         run=FAST))
+    par = execute(mgr, mgr.registry,
+                  OrchestratorOptions(jobs=4, isolate="subprocess",
+                                      shard_grain="benchmark", run=FAST,
+                                      results_dir=str(tmp_path),
+                                      run_id="d1"))
+    assert _names(par.doc) == _names(inline.doc)
+    assert _schemas(par.doc) == _schemas(inline.doc)
+
+    # interrupt: drop two instances, then resume with a different job count
+    out = tmp_path / "d1"
+    for item in (par.plan.items[1], par.plan.items[-1]):
+        (out / "shards" / f"{item.instance_id}.json").unlink()
+    (out / "merged.json").unlink()
+    resumed = execute(mgr, mgr.registry,
+                      OrchestratorOptions(jobs=2, isolate="subprocess",
+                                          shard_grain="benchmark",
+                                          run=FAST, resume=True,
+                                          results_dir=str(tmp_path),
+                                          run_id="d1"))
+    assert sum(1 for r in resumed.instances if r.cached) == \
+        len(par.plan.items) - 2
+    assert _names(resumed.doc) == _names(inline.doc)
+    assert _schemas(resumed.doc) == _schemas(inline.doc)
+    merged = json.loads((out / "merged.json").read_text())
+    assert _names(merged) == _names(inline.doc)
+
+
+def test_external_scopes_run_inline_at_benchmark_grain():
+    """add_scope() scopes (no importable module) can't be re-imported by
+    a worker — the plan runs them inline even under --jobs N."""
+    from repro.core.benchmark import Benchmark
+    from repro.core.scope import Scope
+    mgr = make_mgr([])
+    def _register(reg):
+        reg.register(Benchmark("ext/x", lambda s: None, scope="ext"))
+    mgr.add_scope(Scope(name="ext", register=_register))
+    mgr.register_all()
+    res = execute(mgr, mgr.registry,
+                  OrchestratorOptions(jobs=2, isolate="subprocess",
+                                      shard_grain="benchmark", run=FAST))
+    assert [r.item.name for r in res.instances] == ["ext/x"]
+    assert res.instances[0].status == "ok"
+    assert _names(res.doc) == ["ext/x"]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,207 @@
+"""Work-plan layer: instance enumeration, stable IDs, cost hints, LPT
+binning, and the `python -m repro plan` CLI (repro.core.plan)."""
+import json
+
+import pytest
+
+from repro.core import baseline as bl
+from repro.core.flags import FlagRegistry
+from repro.core.hooks import HookChain
+from repro.core.plan import (Plan, PlanItem, build_plan, instance_id,
+                             load_cost_hints, scope_worklist)
+from repro.core.registry import BenchmarkRegistry
+from repro.core.runner import RunOptions, run_benchmarks
+from repro.core.scope import Scope, ScopeManager
+
+
+def make_mgr(modules):
+    mgr = ScopeManager(registry=BenchmarkRegistry(), flags=FlagRegistry(),
+                       hooks=HookChain())
+    mgr.load(modules)
+    mgr.register_all()
+    return mgr
+
+
+def item(name, cost=None, scope="s", module="m"):
+    return PlanItem(instance_id=instance_id(name), name=name, scope=scope,
+                    family=name.rsplit("/", 1)[0] if "/" in name else name,
+                    module=module, arg_set=(), cost=cost)
+
+
+# ---------------------------------------------------------------------------
+# enumeration + stable IDs
+# ---------------------------------------------------------------------------
+
+def test_build_plan_enumerates_in_document_order():
+    """Plan order == the benchmark order of an inline scope-grained run —
+    the invariant that keeps merged.json deterministic across grains."""
+    mgr = make_mgr(["repro.scopes.example_scope"])
+    seq = run_benchmarks(mgr.registry.filter(".*"),
+                         RunOptions(min_time=0.001), progress=False)
+    plan = build_plan(mgr, mgr.registry)
+    assert [i.name for i in plan.items] == \
+        [r["name"] for r in seq["benchmarks"]]
+    assert all(i.scope == "example" for i in plan.items)
+    assert all(i.module == "repro.scopes.example_scope"
+               for i in plan.items)
+    # arg sets round-trip: saxpy sweep is recorded per instance
+    saxpy = [i for i in plan.items if i.family == "example/saxpy"]
+    assert [i.arg_set for i in saxpy] == \
+        [(256,), (1024,), (4096,), (16384,), (65536,)]
+
+
+def test_instance_ids_stable_unique_and_fs_safe():
+    mgr = make_mgr(["repro.scopes.example_scope"])
+    a = build_plan(mgr, mgr.registry)
+    b = build_plan(mgr, mgr.registry)
+    ids = [i.instance_id for i in a.items]
+    assert ids == [i.instance_id for i in b.items]   # stable across builds
+    assert len(set(ids)) == len(ids)                 # unique
+    for iid in ids:
+        assert "/" not in iid and ":" not in iid     # filesystem-safe
+    # sanitization alone would collide; the digest must disambiguate
+    assert instance_id("a/b:1") != instance_id("a/b_1")
+    assert instance_id("x") == instance_id("x")
+
+
+def test_plan_item_meta_round_trips():
+    it = item("s/f/2", cost=1.5)
+    assert PlanItem.from_meta(json.loads(json.dumps(it.meta()))) == it
+
+
+def test_scope_worklist_skips_disabled_and_unavailable():
+    mgr = make_mgr(["repro.scopes.example_scope", "no.such.module"])
+    mgr.add_scope(Scope(name="ext"))
+    assert scope_worklist(mgr) == [
+        ("example", "repro.scopes.example_scope"), ("ext", "<external>")]
+    mgr.configure(disable=["example"])
+    assert scope_worklist(mgr) == [("ext", "<external>")]
+    # plan construction honors the same selection: example's registered
+    # benchmarks no longer enumerate once the scope is disabled
+    assert build_plan(mgr, mgr.registry).items == []
+
+
+# ---------------------------------------------------------------------------
+# cost hints + LPT binning
+# ---------------------------------------------------------------------------
+
+def test_lpt_bins_balance_by_cost():
+    plan = Plan(items=[item("s/a", 4.0), item("s/b", 3.0),
+                       item("s/c", 2.0), item("s/d", 1.0)])
+    bins = plan.bins(2)
+    loads = [sum(plan.cost_of(i) for i in b) for b in bins]
+    assert sorted(loads) == [5.0, 5.0]       # LPT: {4,1} and {3,2}
+    assert [i.name for i in bins[0]] == ["s/a", "s/d"]
+    assert [i.name for i in bins[1]] == ["s/b", "s/c"]
+
+
+def test_bins_preserve_plan_order_and_drop_empty():
+    plan = Plan(items=[item(f"s/{k}") for k in "abcde"])
+    bins = plan.bins(3)
+    for b in bins:
+        names = [i.name for i in b]
+        assert names == sorted(names)        # document order within a bin
+    assert plan.bins(10) and all(len(b) == 1 for b in plan.bins(10))
+    assert len(plan.bins(10)) == 5           # empty bins dropped
+    assert [i.name for b in plan.bins(1) for i in b] == \
+        [i.name for i in plan.items]
+
+
+def test_bins_deterministic():
+    plan = Plan(items=[item(f"s/{k}", cost=1.0) for k in "abcdef"])
+    assert [[i.name for i in b] for b in plan.bins(3)] == \
+        [[i.name for i in b] for b in plan.bins(3)]
+
+
+def test_default_cost_is_median_of_hints():
+    mgr = make_mgr(["repro.scopes.example_scope"])
+    hints = {"example/noop": 2.0, "example/saxpy/n:256": 6.0}
+    plan = build_plan(mgr, mgr.registry, cost_hints=hints)
+    by = {i.name: i for i in plan.items}
+    assert by["example/noop"].cost == 2.0
+    assert by["example/saxpy/n:1024"].cost is None
+    assert plan.cost_of(by["example/saxpy/n:1024"]) == 4.0  # median hint
+
+
+def test_load_cost_hints_from_gb_document(tmp_path):
+    doc = {"context": {}, "benchmarks": [
+        {"name": "s/a", "run_name": "s/a", "run_type": "iteration",
+         "repetitions": 1, "repetition_index": 0, "threads": 1,
+         "iterations": 10, "real_time": 2000.0, "cpu_time": 2000.0,
+         "time_unit": "us"}]}
+    p = tmp_path / "base.json"
+    p.write_text(json.dumps(doc))
+    hints = load_cost_hints(str(p))
+    assert hints["s/a"] == pytest.approx(2e-3)    # us → seconds
+
+
+def test_load_cost_hints_prefers_manifest_durations(tmp_path):
+    run = tmp_path / "r"
+    run.mkdir()
+    (run / "manifest.json").write_text(json.dumps({
+        "run_id": "r", "grain": "benchmark",
+        "items": [
+            {"instance_id": "x", "name": "s/a", "status": "ok",
+             "duration_s": 7.5, "shard": "shards/x.json"},
+            {"instance_id": "y", "name": "s/b", "status": "error",
+             "duration_s": 1.0, "shard": "shards/y.json"},
+        ]}))
+    hints = load_cost_hints(str(run))
+    assert hints == {"s/a": 7.5}   # wall durations; failed items excluded
+
+
+# ---------------------------------------------------------------------------
+# baseline/scopeplot read instance-sharded run directories
+# ---------------------------------------------------------------------------
+
+def _instance_shard(name, t_us):
+    return {"context": {"instance": {"instance_id": instance_id(name),
+                                     "name": name, "status": "ok"}},
+            "benchmarks": [{
+                "name": name, "run_name": name, "run_type": "iteration",
+                "repetitions": 1, "repetition_index": 0, "threads": 1,
+                "iterations": 1, "real_time": t_us, "cpu_time": t_us,
+                "time_unit": "us"}]}
+
+
+def _write_instance_run_dir(run, names, drop_manifest=False):
+    shards = run / "shards"
+    shards.mkdir(parents=True)
+    items = []
+    for n in names:
+        iid = instance_id(n)
+        (shards / f"{iid}.json").write_text(
+            json.dumps(_instance_shard(n, 1.0)))
+        items.append({"instance_id": iid, "name": n, "status": "ok",
+                      "shard": f"shards/{iid}.json"})
+    if not drop_manifest:
+        (run / "manifest.json").write_text(json.dumps(
+            {"run_id": run.name, "grain": "benchmark", "items": items}))
+
+
+def test_load_document_reads_interrupted_instance_run_dir(tmp_path):
+    """No merged.json (killed mid-run): shards/*.json are concatenated in
+    manifest (plan) order, manifest.json itself is not mistaken for a
+    shard."""
+    run = tmp_path / "r1"
+    # deliberately non-alphabetical plan order — manifest must win
+    _write_instance_run_dir(run, ["s/zeta", "s/alpha", "s/mid"])
+    doc = bl.load_document(str(run))
+    assert [r["name"] for r in doc["benchmarks"]] == \
+        ["s/zeta", "s/alpha", "s/mid"]
+
+
+def test_load_document_instance_dir_without_manifest(tmp_path):
+    run = tmp_path / "r2"
+    _write_instance_run_dir(run, ["s/b", "s/a"], drop_manifest=True)
+    doc = bl.load_document(str(run))
+    assert sorted(r["name"] for r in doc["benchmarks"]) == ["s/a", "s/b"]
+
+
+def test_scopeplot_loads_instance_run_dir(tmp_path):
+    from repro.scopeplot import load
+    run = tmp_path / "r3"
+    _write_instance_run_dir(run, ["ex/b/1", "ex/b/2", "io/c"])
+    bf = load(str(run))
+    assert [r.name for r in bf] == ["ex/b/1", "ex/b/2", "io/c"]
+    assert bf.scope_names() == ["ex", "io"]
