@@ -18,9 +18,12 @@ overhead + relative comparisons); TPU numbers are the modeled columns.
 
 Env knobs: ``BENCH_JOBS`` (worker parallelism, default 1 → inline),
 ``BENCH_SHARD_GRAIN`` (``auto``/``benchmark``/``scope``),
-``BENCH_RESULTS_DIR`` (persist shards + manifest + merged.json),
-``BENCH_BASELINE`` (baseline document/run dir; adds a per-benchmark
-``regression``/``improvement``/``similar`` verdict column).
+``BENCH_RESULTS_DIR`` (persist shards + manifest + merged.json, and
+append the run to ``<dir>/history.jsonl``), ``BENCH_BASELINE``
+(baseline document/run dir/history.jsonl; adds a per-benchmark
+``regression``/``improvement``/``similar`` verdict column),
+``BENCH_REPORT`` (with BENCH_RESULTS_DIR: also render the run's
+HTML/Markdown report — repro.scopeplot.report).
 """
 import os
 
@@ -148,6 +151,21 @@ def figure3_plot(docs) -> None:
         print(f"fig3_plot,0.00,{out}")
 
 
+def _report(result) -> None:
+    """Render the run's report when BENCH_REPORT + BENCH_RESULTS_DIR ask
+    for one.  Report failure must not fail the harness run."""
+    if not (os.environ.get("BENCH_REPORT") and result.out_dir):
+        return
+    import sys
+    try:
+        from repro.scopeplot.report import generate_run_report
+        paths = generate_run_report(result.out_dir)
+        print(f"report,0.00,{paths['html']}")
+    except Exception as e:  # noqa: BLE001 - artifact, not a gate
+        print(f"BENCH_REPORT failed ({e}); skipping report",
+              file=sys.stderr)
+
+
 def main() -> None:
     result, unavailable, scopes = run_all()
     verdicts = _baseline_verdicts(result.doc)
@@ -163,6 +181,7 @@ def main() -> None:
         if shard.status in ("ok", "partial"):
             docs[scope] = shard.doc
     figure3_plot(docs)
+    _report(result)
 
 
 if __name__ == '__main__':

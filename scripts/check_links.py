@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Dead-relative-link checker for the Markdown docs tree.
+
+Usage::
+
+    python scripts/check_links.py README.md docs [more files/dirs...]
+
+Scans every Markdown file for inline links/images ``[text](target)``
+and reference definitions ``[ref]: target``, and fails (exit 1) when a
+*relative* target doesn't exist on disk.  External (``http(s)://``,
+``mailto:``) and pure-anchor (``#...``) targets are skipped; a relative
+target's ``#fragment`` is stripped before the existence check.
+
+CI runs this over README.md + docs/ so a renamed file can't leave a
+dead link behind; ``tests/test_docs.py`` runs the same check in tier-1.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Iterable, List, Tuple
+
+# [text](target) — target up to the first unescaped ')' — and [ref]: target
+_INLINE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def markdown_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, files in os.walk(p):
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".md"))
+        elif p.endswith(".md"):
+            out.append(p)
+    return out
+
+
+def link_targets(text: str) -> List[str]:
+    return _INLINE.findall(text) + _REFDEF.findall(text)
+
+
+def dead_links(md_path: str) -> List[Tuple[str, str]]:
+    """(target, reason) for every broken relative link in one file."""
+    with open(md_path) as f:
+        text = f.read()
+    base = os.path.dirname(os.path.abspath(md_path))
+    bad: List[Tuple[str, str]] = []
+    for target in link_targets(text):
+        if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = path if os.path.isabs(path) else os.path.join(base, path)
+        if not os.path.exists(resolved):
+            bad.append((target, f"missing: {os.path.normpath(resolved)}"))
+    return bad
+
+
+def main(argv: List[str]) -> int:
+    roots = argv or ["README.md", "docs"]
+    files = markdown_files(roots)
+    if not files:
+        print(f"error: no markdown files under {roots}", file=sys.stderr)
+        return 2
+    failures = 0
+    for md in files:
+        for target, reason in dead_links(md):
+            print(f"{md}: dead link ({target}) — {reason}",
+                  file=sys.stderr)
+            failures += 1
+    print(f"checked {len(files)} markdown file(s): "
+          f"{failures or 'no'} dead link(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

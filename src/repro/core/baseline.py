@@ -233,7 +233,18 @@ def load_document(path: str) -> Dict[str, Any]:
     shards (a run interrupted before the merge still compares).  Both
     scope-grained (``<scope>.json``) and benchmark-grained
     (``shards/<instance>.json`` + ``manifest.json``) run directories read
-    back through the same merged, schema-identical document."""
+    back through the same merged, schema-identical document.
+
+    A ``*.jsonl`` path is read as a run-history file
+    (:mod:`repro.core.history`): the last
+    :data:`~repro.core.history.DEFAULT_WINDOW` runs of every benchmark
+    fold into one synthetic document whose repetitions are the per-run
+    means — so ``--baseline results/history.jsonl`` gates against the
+    *windowed* history, catching slow drifts that each single-run diff
+    called similar."""
+    if path.endswith(".jsonl"):
+        from .history import window_document
+        return window_document(path)
     if os.path.isdir(path):
         merged = os.path.join(path, "merged.json")
         if os.path.exists(merged):
@@ -267,18 +278,28 @@ def save_baseline(doc: Dict[str, Any], path: str) -> None:
 # CLI (python -m repro compare)
 # ---------------------------------------------------------------------------
 
-def compare_main(argv: Optional[List[str]] = None) -> int:
+def build_compare_parser() -> argparse.ArgumentParser:
+    from .cli_examples import epilog
     ap = argparse.ArgumentParser(
         prog="python -m repro compare",
-        description="Compare two benchmark result documents")
-    ap.add_argument("baseline", help="baseline JSON file or run directory")
+        description="Compare two benchmark result documents "
+                    "(JSON file, results/<run-id> directory, or a "
+                    "history.jsonl windowed baseline)",
+        epilog=epilog("compare"),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("baseline", help="baseline JSON file, run directory, "
+                                     "or history.jsonl")
     ap.add_argument("contender", help="contender JSON file or run directory")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="relative change needed to flag (default 0.10)")
     ap.add_argument("--sigmas", type=float, default=2.0,
                     help="pooled-stddev multiple the mean shift must clear "
                          "when repetition data exists (default 2.0)")
-    ns = ap.parse_args(argv)
+    return ap
+
+
+def compare_main(argv: Optional[List[str]] = None) -> int:
+    ns = build_compare_parser().parse_args(argv)
     try:
         base = load_document(ns.baseline)
         new = load_document(ns.contender)

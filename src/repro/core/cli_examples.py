@@ -1,0 +1,63 @@
+"""Copy-pasteable ``--help`` examples for every ``python -m repro`` command.
+
+Kept as data (not inline strings) so ``tests/test_docs.py`` can assert
+two things that otherwise rot silently: every example appears verbatim
+in its subcommand's ``--help`` epilog, and every example still *parses*
+against the current argument surface.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+# command → [(what it does, exact command line), ...]
+EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
+    "run": [
+        ("run every scope in 4 isolated workers; shards, merged.json and "
+         "history land under results/<run-id>/",
+         "python -m repro run --jobs 4 --results-dir results"),
+        ("finish an interrupted run: completed instances are skipped",
+         "python -m repro run --jobs 4 --results-dir results "
+         "--resume 20260731T120000-42"),
+        ("one scope, one benchmark family, plain GB-JSON to a file",
+         "python -m repro run --enable-scope example "
+         "--benchmark_filter example/saxpy --benchmark_out saxpy.json"),
+        ("gate against the windowed run history (exit 1 on regression)",
+         "python -m repro run --jobs 2 --baseline results/history.jsonl"),
+        ("store this run as the baseline for later gating",
+         "python -m repro run --save-baseline results/baseline.json"),
+    ],
+    "plan": [
+        ("print every benchmark instance with its predicted cost and "
+         "LPT worker-bin assignment",
+         "python -m repro plan --jobs 4"),
+        ("use a prior run's measured durations as cost hints",
+         "python -m repro plan --jobs 4 --costs results/20260731T120000-42"),
+    ],
+    "compare": [
+        ("mean/stddev-aware diff of two runs (exit 1 on regression)",
+         "python -m repro compare results/baseline.json "
+         "results/20260731T120000-42"),
+        ("diff the latest run against the windowed history baseline",
+         "python -m repro compare results/history.jsonl "
+         "results/20260731T120000-42 --threshold 0.05"),
+    ],
+    "report": [
+        ("render report/index.html + report.md for one run",
+         "python -m repro report 20260731T120000-42"),
+        ("cross-run trend report over everything in history.jsonl",
+         "python -m repro report history --results-dir results"),
+        ("wider drift window, custom output directory",
+         "python -m repro report 20260731T120000-42 --output /tmp/report "
+         "--window 10"),
+    ],
+}
+
+
+def epilog(command: str) -> str:
+    """RawDescriptionHelpFormatter-ready examples block for ``command``."""
+    lines = ["examples:"]
+    for what, cmd in EXAMPLES.get(command, []):
+        lines.append(f"  # {what}")
+        lines.append(f"  $ {cmd}")
+        lines.append("")
+    return "\n".join(lines).rstrip()

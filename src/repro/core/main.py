@@ -5,6 +5,7 @@ Subcommands::
     python -m repro [run] [flags...]       # run benchmarks (default)
     python -m repro plan [flags...]        # print the work plan + costs
     python -m repro compare A.json B.json  # diff two result documents
+    python -m repro report <run-id>        # HTML/Markdown run report
 
 Startup sequence mirrors the paper's run stage:
 
@@ -18,7 +19,11 @@ Startup sequence mirrors the paper's run stage:
      ``--shard-grain benchmark`` schedules individual benchmark
      instances, ``--resume <run-id>`` completes an interrupted run;
      see repro.core.orchestrate), write the merged GB-JSON data file
+     and append the run to ``<results-dir>/history.jsonl``
   7. optionally diff against / store a baseline (repro.core.baseline)
+
+``--help`` on the binary and on every subcommand carries copy-pasteable
+examples (repro.core.cli_examples); tests assert they stay parseable.
 """
 from __future__ import annotations
 
@@ -31,6 +36,7 @@ from . import logging as scope_logging
 from .baseline import (compare_documents, compare_main, format_comparisons,
                        gate_failures, load_document, save_baseline,
                        summarize)
+from .cli_examples import epilog
 from .flags import FLAGS
 from .hooks import HOOKS
 from .orchestrate import OrchestratorOptions, execute
@@ -41,12 +47,35 @@ from .scope import ScopeManager
 
 log = scope_logging.get_logger("main")
 
+_OVERVIEW = """\
+usage: python -m repro [COMMAND] [flags...]
+
+The SCOPE binary: run benchmark scopes, plan/schedule the work, compare
+results, and render reports.
+
+commands:
+  run       run benchmarks (the default when COMMAND is omitted)
+  plan      print the work plan with predicted costs and worker bins
+  compare   mean/stddev-aware diff of two result documents
+  report    static HTML/Markdown report for a run or the run history
+
+`python -m repro COMMAND --help` shows each command's flags and
+examples.  Start-here docs: README.md, docs/run-pipeline.md.
+"""
+
 
 def main(argv: Optional[List[str]] = None,
          scope_modules: Optional[List[str]] = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] in ("-h", "--help"):
+        print(_OVERVIEW)
+        print(epilog("run"))
+        return 0
     if argv and argv[0] == "compare":
         return compare_main(argv[1:])
+    if argv and argv[0] == "report":
+        from repro.scopeplot.report import report_main
+        return report_main(argv[1:])
     if argv and argv[0] == "plan":
         return plan_main(argv[1:], scope_modules)
     if argv and argv[0] == "run":
@@ -76,11 +105,12 @@ def _setup_scopes(scope_modules: Optional[List[str]],
     return mgr, 0
 
 
-def run_main(argv: List[str],
-             scope_modules: Optional[List[str]] = None) -> int:
-    # Scope selection + orchestration are core-level (not scope flags),
-    # parsed separately from the FLAGS registry.
-    sel = argparse.ArgumentParser(add_help=False)
+def build_run_parser() -> argparse.ArgumentParser:
+    """Core run options (scope flags are parsed separately via FLAGS)."""
+    sel = argparse.ArgumentParser(prog="python -m repro run",
+                                  add_help=False, epilog=epilog("run"),
+                                  formatter_class=
+                                  argparse.RawDescriptionHelpFormatter)
     sel.add_argument("--enable-scope", action="append", default=None,
                      help="enable ONLY these scopes (repeatable)")
     sel.add_argument("--disable-scope", action="append", default=[],
@@ -97,9 +127,11 @@ def run_main(argv: List[str],
                      choices=["auto", "benchmark", "scope"],
                      help="schedulable unit (auto: benchmark when "
                           "--jobs > 1 or resuming, scope otherwise)")
-    sel.add_argument("--results-dir", default=None,
+    sel.add_argument("--results-dir", default="results",
                      help="persist shards + manifest.json + merged.json "
-                          "under <dir>/<run-id>/")
+                          "under <dir>/<run-id>/ and append the run to "
+                          "<dir>/history.jsonl (default: results; pass "
+                          "an empty string to keep the run ephemeral)")
     sel.add_argument("--run-id", default=None,
                      help="run directory name (default: timestamp)")
     sel.add_argument("--resume", default=None, metavar="RUN_ID",
@@ -110,9 +142,34 @@ def run_main(argv: List[str],
                           "per-instance cost hints for LPT scheduling")
     sel.add_argument("--baseline", default=None,
                      help="compare this run against a stored baseline "
-                          "document/run directory")
+                          "document/run directory (a history.jsonl path "
+                          "gates against the windowed run history)")
     sel.add_argument("--save-baseline", default=None,
                      help="store the merged document as a baseline at PATH")
+    return sel
+
+
+def _print_run_help(sel: argparse.ArgumentParser,
+                    scope_modules: Optional[List[str]]) -> None:
+    """Core options + every scope flag, in one --help."""
+    mgr = ScopeManager()
+    mgr.load(scope_modules)
+    print(sel.format_help())
+    print("scope flags (declared by the loaded scopes):")
+    flag_parser = FLAGS.build_parser(
+        argparse.ArgumentParser(prog="python -m repro run",
+                                add_help=False, usage=argparse.SUPPRESS))
+    print(flag_parser.format_help())
+
+
+def run_main(argv: List[str],
+             scope_modules: Optional[List[str]] = None) -> int:
+    # Scope selection + orchestration are core-level (not scope flags),
+    # parsed separately from the FLAGS registry.
+    sel = build_run_parser()
+    if any(a in ("-h", "--help") for a in argv):
+        _print_run_help(sel, scope_modules)
+        return 0
     sel_ns, rest = sel.parse_known_args(argv)
 
     if sel_ns.resume and not sel_ns.results_dir:
@@ -122,6 +179,17 @@ def run_main(argv: List[str],
         log.error("--resume requires benchmark shard grain "
                   "(drop --shard-grain scope)")
         return 2
+
+    # load the baseline up front: a bad path must fail before the run,
+    # and a history.jsonl baseline must be snapshotted before this run
+    # appends itself to the same file
+    base_doc = None
+    if sel_ns.baseline:
+        try:
+            base_doc = load_document(sel_ns.baseline)
+        except (OSError, json.JSONDecodeError) as e:
+            log.error("baseline %s unreadable: %s", sel_ns.baseline, e)
+            return 2
 
     mgr, rc = _setup_scopes(scope_modules, sel_ns.enable_scope,
                             sel_ns.disable_scope, rest)
@@ -160,7 +228,7 @@ def run_main(argv: List[str],
             repetitions=FLAGS.get("benchmark_repetitions", 1),
         ),
         flag_values={s.name: FLAGS.get(s.name) for s in FLAGS.declared()},
-        results_dir=sel_ns.results_dir,
+        results_dir=sel_ns.results_dir or None,
         run_id=sel_ns.resume or sel_ns.run_id,
         resume=bool(sel_ns.resume),
         cost_source=sel_ns.costs,
@@ -176,10 +244,14 @@ def run_main(argv: List[str],
     else:
         write_json(doc, sys.stdout)
         print()
+    if result.out_dir:
+        log.info("run %s persisted under %s (render it: python -m repro "
+                 "report %s)", result.run_id, result.out_dir,
+                 result.run_id)
 
     rc = 0
-    if sel_ns.baseline:
-        comps = compare_documents(load_document(sel_ns.baseline), doc)
+    if base_doc is not None:
+        comps = compare_documents(base_doc, doc)
         print(format_comparisons(comps), file=sys.stderr)
         counts = summarize(comps)
         log.info("baseline diff: %s",
@@ -191,6 +263,21 @@ def run_main(argv: List[str],
     return rc
 
 
+def build_plan_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro plan",
+                                 add_help=False, epilog=epilog("plan"),
+                                 formatter_class=
+                                 argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--enable-scope", action="append", default=None)
+    ap.add_argument("--disable-scope", action="append", default=[])
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker count the bin column assumes")
+    ap.add_argument("--costs", default=None, metavar="PATH",
+                    help="prior run directory or GB-JSON document used as "
+                         "per-instance cost hints")
+    return ap
+
+
 def plan_main(argv: List[str],
               scope_modules: Optional[List[str]] = None) -> int:
     """``python -m repro plan`` — print the work plan with predicted costs.
@@ -200,15 +287,10 @@ def plan_main(argv: List[str],
     (``--costs`` hints, else the plan default), and the worker bin LPT
     assigns it to for the given ``--jobs``.
     """
-    ap = argparse.ArgumentParser(prog="python -m repro plan",
-                                 add_help=False)
-    ap.add_argument("--enable-scope", action="append", default=None)
-    ap.add_argument("--disable-scope", action="append", default=[])
-    ap.add_argument("--jobs", type=int, default=1,
-                    help="worker count the bin column assumes")
-    ap.add_argument("--costs", default=None, metavar="PATH",
-                    help="prior run directory or GB-JSON document used as "
-                         "per-instance cost hints")
+    ap = build_plan_parser()
+    if any(a in ("-h", "--help") for a in argv):
+        print(ap.format_help())
+        return 0
     ns, rest = ap.parse_known_args(argv)
 
     mgr, rc = _setup_scopes(scope_modules, ns.enable_scope,

@@ -36,7 +36,12 @@ Shared machinery at both grains:
     reads merged output unchanged;
   * **baseline diffing** — the merged document is what
     :mod:`repro.core.baseline` stores and compares (``python -m repro
-    compare A.json B.json``).
+    compare A.json B.json``);
+  * **run history** — a persisted run appends one record per benchmark
+    instance to ``<results-dir>/history.jsonl`` at merge time
+    (:mod:`repro.core.history`), the store ``python -m repro report``
+    renders trends from and ``--baseline results/history.jsonl`` gates
+    against.
 """
 from __future__ import annotations
 
@@ -55,6 +60,7 @@ from concurrent.futures.process import BrokenProcessPool
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from .history import append_run
 from .logging import get_logger
 from .plan import Plan, PlanItem, build_plan, load_cost_hints, scope_worklist
 from .runner import (RunOptions, run_benchmarks, run_single_instance,
@@ -430,6 +436,16 @@ def _atomic_write_json(doc: Dict[str, Any], path: str) -> None:
     tmp = path + ".tmp"
     write_json(doc, tmp)
     os.replace(tmp, path)
+
+
+def _append_history(results_dir: str, doc: Dict[str, Any],
+                    run_id: str) -> None:
+    """Best-effort run-history append — never fails a finished run."""
+    try:
+        append_run(results_dir, doc, run_id=run_id)
+    except Exception:  # noqa: BLE001 - history is an artifact, not a gate
+        log.warning("run-history append failed for %s:\n%s", run_id,
+                    traceback.format_exc(limit=2))
 
 
 def _persist_shard(out_dir: str, shard: ScopeShard) -> None:
@@ -835,6 +851,7 @@ def _execute_plan_grain(mgr, registry, opts: OrchestratorOptions,
             log.info("wrote %s (%d records from %d instances)",
                      os.path.join(out_dir, "merged.json"),
                      len(doc["benchmarks"]), len(plan.items))
+            _append_history(opts.results_dir, doc, run_id)
         return RunResult(doc=doc, shards=shards, run_id=run_id,
                          out_dir=out_dir, plan=plan,
                          instances=[results[i.instance_id]
@@ -914,6 +931,7 @@ def execute(mgr, registry, opts: OrchestratorOptions,
         log.info("wrote %s (%d records from %d shards)",
                  os.path.join(out_dir, "merged.json"),
                  len(doc["benchmarks"]), len(shards))
+        _append_history(opts.results_dir, doc, run_id)
     return RunResult(doc=doc, shards=shards, run_id=run_id, out_dir=out_dir)
 
 

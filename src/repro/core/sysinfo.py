@@ -10,6 +10,8 @@ portability story.
 from __future__ import annotations
 
 import datetime
+import hashlib
+import json
 import os
 import platform
 from typing import Any, Dict, Optional
@@ -57,6 +59,28 @@ def _jax_info() -> Dict[str, Any]:
         }
     except Exception as e:  # pragma: no cover - jax import failure
         return {"jax_version": "unavailable", "error": str(e)}
+
+
+# Context keys that determine whether two runs are comparable: the
+# machine, the accelerator stack, and the XLA configuration — NOT the
+# date/run-id, which differ on every run by construction.
+_DIGEST_KEYS = (
+    "host_name", "machine", "processor", "num_cpus", "model_name",
+    "jax_version", "backend", "device_count", "device_kind",
+    "xla_flags", "target_hardware", "scope_version",
+)
+
+
+def context_digest(ctx: Dict[str, Any]) -> str:
+    """Short stable digest of a context's comparability-relevant facts.
+
+    Two runs with the same digest were produced by the same
+    host/accelerator-stack configuration; run-history records carry it
+    so cross-machine records are visibly not comparable.
+    """
+    facts = {k: ctx.get(k) for k in _DIGEST_KEYS}
+    blob = json.dumps(facts, sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode("utf-8")).hexdigest()[:12]
 
 
 def build_context(extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:

@@ -4,11 +4,18 @@ Object model + manipulation library for Google-Benchmark JSON files, plus a
 CLI (``python -m repro.scopeplot``) with the paper's subcommands:
 
   * ``spec``         — YAML-spec-driven plots (line w/ error bars, bar,
-                       regression)
+                       grouped_bar, regression, speedup, timeseries)
+  * ``batch``        — render a spec directory, rebuilding only stale
+                       plots (paper §V-A.2 deps, applied directly)
+  * ``report``       — auto-generated HTML/Markdown run report
+                       (``--report`` works as an alias)
   * ``deps``         — emit make-format dependencies of a spec file
   * ``bar``          — one-shot bar plot without a spec file
   * ``cat``          — structure-preserving concatenation of JSON files
   * ``filter_name``  — keep benchmarks whose name matches a regex
+
+Full spec-schema reference (every key, every plot type, the error
+contract): ``docs/scopeplot.md``.
 """
 from .model import BenchmarkFile, BenchmarkRecord, cat, filter_name, load, loads
 from .frame import Frame

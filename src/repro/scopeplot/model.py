@@ -172,15 +172,21 @@ class BenchmarkFile:
         return Frame(cols)
 
     def xy(self, x: str, y: str = "real_time"):
-        """Extract (x, y) series; x may be a name-arg (``n``) or a field."""
+        """Extract (x, y) series; x may be a name-arg (``n``), a record
+        field, or the computed field ``real_time_s`` (real_time
+        normalized to seconds across time units)."""
+        def value(r: BenchmarkRecord, key: str):
+            if key == "real_time_s":
+                return r.real_time_seconds()
+            v = r.get(key)
+            return v if v is not None else r.arg(key)
+
         xs, ys = [], []
         for r in self.records:
             if r.get("run_type") == "aggregate":
                 continue
-            xv = r.get(x)
-            if xv is None:
-                xv = r.arg(x)
-            yv = r.get(y)
+            xv = value(r, x)
+            yv = value(r, y)
             if xv is None or yv is None:
                 continue
             try:

@@ -1,12 +1,12 @@
 """YAML-spec-driven plotting (paper §V-A.1).
 
-A *spec file* controls the plot type (line with error bars, bar plot,
-linear-regression plot with error bars), the source JSON file for each data
+A *spec file* controls the plot type, the source JSON file for each data
 series, regex filters to extract the desired data, per-series scaling
 transformations, and styling.  Mirrors ScopePlot's spec schema::
 
     title: SAXPY throughput
-    type: line            # line | bar | regression
+    type: line            # line | bar | grouped_bar | regression
+                          #   | speedup | timeseries
     output: saxpy.png
     x_axis: {label: elements, scale: log}
     y_axis: {label: GB/s}
@@ -17,6 +17,24 @@ transformations, and styling.  Mirrors ScopePlot's spec schema::
         xfield: n                  # GB name-arg or record field
         yfield: bytes_per_second
         yscale: 1.0e-9
+
+Plot types (full schema reference: ``docs/scopeplot.md``):
+
+  * ``line`` — line with error bars (stddev aggregates when present);
+  * ``bar`` / ``grouped_bar`` — bars per series; grouped_bar aligns
+    series by x *category* (union across series), so runs with
+    different instance sets still line up;
+  * ``regression`` — scatter + least-squares fit line;
+  * ``speedup`` — horizontal bars of ``baseline_time / series_time``
+    per matching run_name; needs a top-level ``baseline:`` mapping;
+  * ``timeseries`` — cross-run trend lines read from a run-history
+    ``history.jsonl`` (one line per benchmark, x = run, y = mean ±
+    stddev).
+
+Error contract: :func:`load_spec` raises :class:`SpecError` (a
+``ValueError``) with ``<path>:<line>: <message>`` *before* any data is
+read or rendered — an invalid ``type``, ``output`` or ``series`` fails
+at the offending spec line, not deep inside matplotlib.
 """
 from __future__ import annotations
 
@@ -32,30 +50,111 @@ import matplotlib
 matplotlib.use("Agg")                     # headless
 import matplotlib.pyplot as plt           # noqa: E402
 
+#: Every plot type render_spec understands.
+PLOT_TYPES = ("line", "bar", "grouped_bar", "regression", "speedup",
+              "timeseries")
+
+
+class SpecError(ValueError):
+    """A spec file failed validation; message carries ``path:line:``."""
+
+    def __init__(self, path: str, line: int, message: str):
+        self.path = path
+        self.line = line
+        where = f"{path}:{line}" if line else path
+        super().__init__(f"{where}: {message}")
+
+
+def _key_lines(text: str) -> Dict[str, int]:
+    """1-based line number of every top-level mapping key."""
+    try:
+        node = yaml.compose(text)
+    except yaml.YAMLError:
+        return {}
+    out: Dict[str, int] = {}
+    if isinstance(node, yaml.MappingNode):
+        for k, _ in node.value:
+            if isinstance(k, yaml.ScalarNode):
+                out[str(k.value)] = k.start_mark.line + 1
+    return out
+
 
 def load_spec(path: str) -> Dict[str, Any]:
+    """Load + validate a spec file; all schema errors carry line numbers.
+
+    Validated up front (the error contract documented in
+    ``docs/scopeplot.md``): ``type`` must be one of :data:`PLOT_TYPES`,
+    ``output`` a string path, ``series`` a non-empty list of mappings
+    each naming an ``input_file``, and a ``speedup`` spec must carry a
+    ``baseline: {input_file: ...}`` mapping.
+    """
     with open(path) as f:
-        spec = yaml.safe_load(f)
-    if not isinstance(spec, dict) or "series" not in spec:
-        raise ValueError(f"invalid spec file {path!r}: needs a 'series' list")
+        text = f.read()
+    try:
+        spec = yaml.safe_load(text)
+    except yaml.YAMLError as e:
+        mark = getattr(e, "problem_mark", None)
+        line = mark.line + 1 if mark is not None else 0
+        raise SpecError(path, line, f"invalid YAML ({e})") from e
+    if not isinstance(spec, dict):
+        raise SpecError(path, 1, "spec must be a YAML mapping "
+                                 f"(got {type(spec).__name__})")
+    lines = _key_lines(text)
+
+    ptype = spec.get("type", "line")
+    if ptype not in PLOT_TYPES:
+        raise SpecError(path, lines.get("type", 1),
+                        f"unknown plot type {ptype!r} (expected one of: "
+                        + ", ".join(PLOT_TYPES) + ")")
+    out = spec.get("output")
+    if out is not None and not isinstance(out, str):
+        raise SpecError(path, lines.get("output", 1),
+                        "'output' must be a string path "
+                        f"(got {type(out).__name__})")
+    series = spec.get("series")
+    if not isinstance(series, list) or not series:
+        raise SpecError(path, lines.get("series", 1),
+                        "spec needs a non-empty 'series' list")
+    sline = lines.get("series", 1)
+    for i, s in enumerate(series):
+        if not isinstance(s, dict):
+            raise SpecError(path, sline,
+                            f"series[{i}] must be a mapping "
+                            f"(got {type(s).__name__})")
+        if not s.get("input_file"):
+            raise SpecError(path, sline,
+                            f"series[{i}] needs an 'input_file'")
+    if ptype == "speedup":
+        base = spec.get("baseline")
+        if not isinstance(base, dict) or not base.get("input_file"):
+            raise SpecError(path, lines.get("baseline", lines.get("type", 1)),
+                            "speedup spec needs a 'baseline' mapping with "
+                            "an 'input_file'")
     return spec
 
 
 def spec_dependencies(spec: Dict[str, Any]) -> List[str]:
-    """Paper §V-A.2 (deps): the JSON files a spec reads."""
+    """Paper §V-A.2 (deps): the data files a spec reads."""
     out: List[str] = []
     for s in spec.get("series", []):
         p = s.get("input_file")
         if p and p not in out:
             out.append(p)
+    base = spec.get("baseline")
+    if isinstance(base, dict):
+        p = base.get("input_file")
+        if p and p not in out:
+            out.append(p)
     return out
+
+
+def _resolve(path: str, base_dir: str) -> str:
+    return path if os.path.isabs(path) else os.path.join(base_dir, path)
 
 
 def _series_xy(series: Dict[str, Any], base_dir: str = "."
                ) -> Tuple[List[float], List[float], List[float]]:
-    path = series["input_file"]
-    if not os.path.isabs(path):
-        path = os.path.join(base_dir, path)
+    path = _resolve(series["input_file"], base_dir)
     bf = load(path).without_errors()
     if "regex" in series:
         bf = bf.filter_name(series["regex"])
@@ -76,37 +175,198 @@ def _series_xy(series: Dict[str, Any], base_dir: str = "."
     return xs, ys, errs
 
 
-def render_spec(spec: Dict[str, Any], output: Optional[str] = None,
-                base_dir: str = ".") -> str:
-    ptype = spec.get("type", "line")
-    fig, ax = plt.subplots(figsize=spec.get("figsize", (7, 4.5)))
+def _mean_times(source: Dict[str, Any], base_dir: str) -> Dict[str, float]:
+    """run_name → mean seconds for a {input_file, regex?} mapping."""
+    bf = load(_resolve(source["input_file"], base_dir)).without_errors() \
+        .without_aggregates()
+    if "regex" in source:
+        bf = bf.filter_name(source["regex"])
+    pools: Dict[str, List[float]] = {}
+    for r in bf.records:
+        t = r.real_time_seconds()
+        if t is not None:
+            pools.setdefault(r.get("run_name") or r.name, []).append(t)
+    return {name: sum(ts) / len(ts) for name, ts in pools.items() if ts}
+
+
+def _category(x: Any) -> str:
+    if isinstance(x, float) and x.is_integer():
+        return str(int(x))
+    return str(x)
+
+
+# ---------------------------------------------------------------------------
+# per-type renderers
+# ---------------------------------------------------------------------------
+
+def _draw_line(ax, spec: Dict[str, Any], base_dir: str) -> None:
+    for i, series in enumerate(spec["series"]):
+        xs, ys, errs = _series_xy(series, base_dir)
+        ax.errorbar(xs, ys, yerr=errs if any(errs) else None,
+                    marker="o", label=series.get("label", f"series{i}"),
+                    capsize=3)
+
+
+def _draw_bar(ax, spec: Dict[str, Any], base_dir: str) -> None:
     n_series = len(spec["series"])
     width = 0.8 / max(n_series, 1)
+    for i, series in enumerate(spec["series"]):
+        xs, ys, errs = _series_xy(series, base_dir)
+        pos = np.arange(len(xs)) + i * width
+        ax.bar(pos, ys, width=width, label=series.get("label", f"series{i}"),
+               yerr=errs if any(errs) else None, capsize=3)
+        if i == 0:
+            ax.set_xticks(np.arange(len(xs)) + 0.4 - width / 2)
+            ax.set_xticklabels([str(x) for x in xs], rotation=30,
+                               ha="right", fontsize=8)
 
+
+def _draw_grouped_bar(ax, spec: Dict[str, Any], base_dir: str) -> None:
+    """Bars aligned by x *category* — the union across all series.
+
+    Unlike ``bar`` (which assumes every series yields the same x
+    sequence), series with missing categories leave a gap instead of
+    shifting their remaining bars onto the wrong ticks.  A category
+    repeated *within* one series (e.g. ``xfield: n`` matching two
+    families with the same sweep) is disambiguated with an occurrence
+    suffix rather than silently dropping the earlier bars.
+    """
+    categories: List[str] = []
+    loaded = []
+    for i, series in enumerate(spec["series"]):
+        xs, ys, errs = _series_xy(series, base_dir)
+        seen: Dict[str, int] = {}
+        cats = []
+        for x in xs:
+            c = _category(x)
+            seen[c] = seen.get(c, 0) + 1
+            cats.append(c if seen[c] == 1 else f"{c} ({seen[c]})")
+        for c in cats:
+            if c not in categories:
+                categories.append(c)
+        loaded.append((series.get("label", f"series{i}"),
+                       dict(zip(cats, ys)),
+                       dict(zip(cats, errs)) if errs else {}))
+    n_series = max(len(loaded), 1)
+    width = 0.8 / n_series
+    idx = np.arange(len(categories))
+    for i, (label, ymap, emap) in enumerate(loaded):
+        ys = [ymap.get(c, np.nan) for c in categories]
+        errs = [emap.get(c, 0.0) for c in categories]
+        ax.bar(idx + (i - (n_series - 1) / 2) * width, ys, width=width,
+               label=label, yerr=errs if any(errs) else None, capsize=3)
+    ax.set_xticks(idx)
+    ax.set_xticklabels(categories, rotation=30, ha="right", fontsize=8)
+
+
+def _draw_regression(ax, spec: Dict[str, Any], base_dir: str) -> None:
     for i, series in enumerate(spec["series"]):
         xs, ys, errs = _series_xy(series, base_dir)
         label = series.get("label", f"series{i}")
-        if ptype == "bar":
-            pos = np.arange(len(xs)) + i * width
-            ax.bar(pos, ys, width=width, label=label,
-                   yerr=errs if any(errs) else None, capsize=3)
-            if i == 0:
-                ax.set_xticks(np.arange(len(xs)) + 0.4 - width / 2)
-                ax.set_xticklabels([str(x) for x in xs], rotation=30,
-                                   ha="right", fontsize=8)
-        elif ptype == "regression":
-            xf = np.asarray(xs, dtype=float)
-            yf = np.asarray(ys, dtype=float)
-            ax.errorbar(xf, yf, yerr=errs if any(errs) else None, fmt="o",
-                        label=label, capsize=3)
-            if len(xf) >= 2:
-                slope, icept = np.polyfit(xf, yf, 1)
-                grid = np.linspace(xf.min(), xf.max(), 64)
-                ax.plot(grid, slope * grid + icept, "--",
-                        label=f"{label} fit ({slope:.3g}x+{icept:.3g})")
-        else:  # line with error bars
+        xf = np.asarray(xs, dtype=float)
+        yf = np.asarray(ys, dtype=float)
+        ax.errorbar(xf, yf, yerr=errs if any(errs) else None, fmt="o",
+                    label=label, capsize=3)
+        if len(xf) >= 2:
+            slope, icept = np.polyfit(xf, yf, 1)
+            grid = np.linspace(xf.min(), xf.max(), 64)
+            ax.plot(grid, slope * grid + icept, "--",
+                    label=f"{label} fit ({slope:.3g}x+{icept:.3g})")
+
+
+def _draw_speedup(ax, spec: Dict[str, Any], base_dir: str) -> None:
+    """Horizontal bars of baseline_time / series_time (>1 = faster)."""
+    base = _mean_times(spec["baseline"], base_dir)
+    labels: List[str] = []
+    values: List[float] = []
+    colors: List[str] = []
+    for i, series in enumerate(spec["series"]):
+        cur = _mean_times(series, base_dir)
+        tag = series.get("label", f"series{i}")
+        for name in cur:
+            if name not in base or cur[name] <= 0:
+                continue
+            sp = base[name] / cur[name]
+            labels.append(name if len(spec["series"]) == 1
+                          else f"{name} [{tag}]")
+            values.append(sp)
+            colors.append("tab:green" if sp >= 1.0 else "tab:red")
+    pos = np.arange(len(labels))
+    ax.barh(pos, values, color=colors, alpha=0.8)
+    ax.set_yticks(pos)
+    ax.set_yticklabels(labels, fontsize=8)
+    ax.invert_yaxis()
+    ax.axvline(1.0, color="k", linewidth=1)
+    for p, v in zip(pos, values):
+        ax.annotate(f"{v:.2f}x", (v, p), xytext=(3, 0),
+                    textcoords="offset points", va="center", fontsize=8)
+
+
+def _draw_timeseries(ax, spec: Dict[str, Any], base_dir: str) -> None:
+    """Cross-run trend from a history.jsonl (repro.core.history).
+
+    The x axis is the union of every series' run order (first-seen
+    across series), so multiple series reading different history files
+    share one correctly-labeled axis instead of each being plotted
+    against the first file's run order.
+    """
+    from repro.core.history import load_history, run_ids
+    loaded = [(series,
+               load_history(_resolve(series["input_file"], base_dir)))
+              for series in spec["series"]]
+    tick_runs: List[str] = []
+    for _, records in loaded:
+        for rid in run_ids(records):
+            if rid not in tick_runs:
+                tick_runs.append(rid)
+    run_index = {rid: k for k, rid in enumerate(tick_runs)}
+    for series, records in loaded:
+        if series.get("benchmark"):
+            records = [r for r in records
+                       if r.get("name") == series["benchmark"]]
+        elif series.get("regex"):
+            import re
+            rx = re.compile(series["regex"])
+            records = [r for r in records if rx.search(r.get("name", ""))]
+        yscale = float(series.get("yscale", 1.0))
+        by_name: Dict[str, List[Dict[str, Any]]] = {}
+        for r in records:
+            if r.get("mean_s") is not None:
+                by_name.setdefault(r["name"], []).append(r)
+        for name, recs in by_name.items():
+            xs = [run_index[r["run_id"]] for r in recs
+                  if r.get("run_id") in run_index]
+            ys = [float(r["mean_s"]) * yscale for r in recs
+                  if r.get("run_id") in run_index]
+            errs = [float(r.get("stddev_s") or 0.0) * yscale for r in recs
+                    if r.get("run_id") in run_index]
+            label = name if len(by_name) > 1 else \
+                series.get("label", name)
             ax.errorbar(xs, ys, yerr=errs if any(errs) else None,
                         marker="o", label=label, capsize=3)
+    ax.set_xticks(range(len(tick_runs)))
+    ax.set_xticklabels(tick_runs, rotation=30, ha="right", fontsize=8)
+    ax.margins(x=0.05)
+
+
+_RENDERERS = {
+    "line": _draw_line,
+    "bar": _draw_bar,
+    "grouped_bar": _draw_grouped_bar,
+    "regression": _draw_regression,
+    "speedup": _draw_speedup,
+    "timeseries": _draw_timeseries,
+}
+
+
+def render_spec(spec: Dict[str, Any], output: Optional[str] = None,
+                base_dir: str = ".") -> str:
+    ptype = spec.get("type", "line")
+    if ptype not in _RENDERERS:
+        raise SpecError("<spec>", 0, f"unknown plot type {ptype!r} "
+                        "(expected one of: " + ", ".join(PLOT_TYPES) + ")")
+    fig, ax = plt.subplots(figsize=spec.get("figsize", (7, 4.5)))
+    _RENDERERS[ptype](ax, spec, base_dir)
 
     xaxis = spec.get("x_axis", {})
     yaxis = spec.get("y_axis", {})
@@ -114,19 +374,19 @@ def render_spec(spec: Dict[str, Any], output: Optional[str] = None,
         ax.set_xlabel(xaxis["label"])
     if yaxis.get("label"):
         ax.set_ylabel(yaxis["label"])
-    if xaxis.get("scale") == "log" and ptype != "bar":
+    if xaxis.get("scale") == "log" and ptype in ("line", "regression"):
         ax.set_xscale("log", base=2)
     if yaxis.get("scale") == "log":
         ax.set_yscale("log")
     if spec.get("title"):
         ax.set_title(spec["title"])
     ax.grid(True, alpha=0.3)
-    ax.legend(fontsize=8)
+    if ax.get_legend_handles_labels()[0]:
+        ax.legend(fontsize=8)
     fig.tight_layout()
 
     out = output or spec.get("output", "scope_plot.png")
-    if not os.path.isabs(out):
-        out = os.path.join(base_dir, out)
+    out = _resolve(out, base_dir)
     fig.savefig(out, dpi=spec.get("dpi", 120))
     plt.close(fig)
     return out
@@ -145,3 +405,55 @@ def quick_bar(json_path: str, x: str, y: str, title: str = "",
                     "xfield": x, "yfield": y}],
     }
     return render_spec(spec)
+
+
+# ---------------------------------------------------------------------------
+# batch mode (paper §V-A.2: deps → rebuild only stale plots)
+# ---------------------------------------------------------------------------
+
+def spec_files(spec_dir: str) -> List[str]:
+    return sorted(os.path.join(spec_dir, f) for f in os.listdir(spec_dir)
+                  if f.endswith((".yaml", ".yml")))
+
+
+def is_stale(spec_path: str, spec: Dict[str, Any]) -> bool:
+    """True when the spec's output is missing or older than any input.
+
+    Inputs are the spec file itself plus every data dependency
+    (:func:`spec_dependencies`) — the same file set ``scope_plot deps``
+    emits for make, applied directly.
+    """
+    base = os.path.dirname(spec_path) or "."
+    out = _resolve(spec.get("output", "scope_plot.png"), base)
+    if not os.path.exists(out):
+        return True
+    out_mtime = os.path.getmtime(out)
+    deps = [spec_path] + [_resolve(d, base)
+                          for d in spec_dependencies(spec)]
+    return any(os.path.exists(d) and os.path.getmtime(d) > out_mtime
+               for d in deps)
+
+
+def render_spec_dir(spec_dir: str, force: bool = False
+                    ) -> List[Tuple[str, str, str]]:
+    """Render every spec in a directory, skipping up-to-date outputs.
+
+    Relative paths inside each spec resolve against the spec file's own
+    directory.  Returns ``(spec_path, output_path, status)`` per spec,
+    status one of ``rendered`` / ``fresh`` / ``error: <msg>`` — one bad
+    spec doesn't stop the batch.
+    """
+    results: List[Tuple[str, str, str]] = []
+    for path in spec_files(spec_dir):
+        base = os.path.dirname(path) or "."
+        try:
+            spec = load_spec(path)
+            out = _resolve(spec.get("output", "scope_plot.png"), base)
+            if not force and not is_stale(path, spec):
+                results.append((path, out, "fresh"))
+                continue
+            render_spec(spec, base_dir=base)
+            results.append((path, out, "rendered"))
+        except (OSError, ValueError) as e:
+            results.append((path, "", f"error: {e}"))
+    return results

@@ -1,0 +1,120 @@
+"""Docs stay honest: no dead relative links in README/docs, and every
+--help example still appears in its epilog AND still parses against the
+current argument surface (so examples can't rot)."""
+import importlib.util
+import os
+import shlex
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_spec = importlib.util.spec_from_file_location(
+    "check_links", os.path.join(REPO, "scripts", "check_links.py"))
+check_links = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_links)
+
+
+# ---------------------------------------------------------------------------
+# link checker (same code CI runs)
+# ---------------------------------------------------------------------------
+
+def test_no_dead_links_in_docs():
+    roots = [os.path.join(REPO, p) for p in ("README.md", "docs",
+                                             "ROADMAP.md")]
+    files = check_links.markdown_files(roots)
+    assert len(files) >= 4           # README + ROADMAP + 3 docs pages
+    dead = {md: check_links.dead_links(md) for md in files}
+    assert all(not v for v in dead.values()), \
+        {k: v for k, v in dead.items() if v}
+
+
+def test_link_checker_catches_dead_links(tmp_path):
+    md = tmp_path / "x.md"
+    md.write_text("[ok](x.md) [dead](missing.md) "
+                  "[ext](https://example.com) [anchor](#sec) "
+                  "![img](gone.png)\n[ref]: also-gone.md\n")
+    dead = check_links.dead_links(str(md))
+    assert sorted(t for t, _ in dead) == \
+        ["also-gone.md", "gone.png", "missing.md"]
+    assert check_links.main([str(md)]) == 1
+    ok = tmp_path / "ok.md"
+    ok.write_text("[self](ok.md)\n")
+    assert check_links.main([str(ok)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# --help epilogs: examples present and parseable
+# ---------------------------------------------------------------------------
+
+def _parsers():
+    from repro.core.baseline import build_compare_parser
+    from repro.core.main import build_plan_parser, build_run_parser
+    from repro.scopeplot.report import build_report_parser
+    return {"run": build_run_parser(), "plan": build_plan_parser(),
+            "compare": build_compare_parser(),
+            "report": build_report_parser()}
+
+
+def test_examples_cover_every_subcommand():
+    from repro.core.cli_examples import EXAMPLES
+    assert set(EXAMPLES) == {"run", "plan", "compare", "report"}
+    assert all(EXAMPLES[k] for k in EXAMPLES)
+
+
+def test_examples_appear_in_help_epilogs():
+    from repro.core.cli_examples import EXAMPLES
+    parsers = _parsers()
+    for cmd, examples in EXAMPLES.items():
+        help_text = parsers[cmd].format_help()
+        for _, example in examples:
+            assert example in help_text, (cmd, example)
+
+
+def test_examples_still_parse():
+    """Every example command line round-trips through the real parser
+    for its subcommand; leftover tokens must be declared scope/core
+    flags (the FLAGS registry), not typos."""
+    from repro.core.cli_examples import EXAMPLES
+    from repro.core.flags import FLAGS
+    parsers = _parsers()
+    for cmd, examples in EXAMPLES.items():
+        for _, example in examples:
+            tokens = shlex.split(example)
+            assert tokens[:3] == ["python", "-m", "repro"], example
+            assert tokens[3] == cmd, example
+            ns, rest = parsers[cmd].parse_known_args(tokens[4:])
+            if rest:
+                flag_parser = FLAGS.build_parser()
+                _, unknown = flag_parser.parse_known_args(rest)
+                assert unknown == [], (example, unknown)
+
+
+def test_top_level_help(capsys):
+    from repro.core.main import main
+    assert main(["--help"]) == 0
+    out = capsys.readouterr().out
+    for cmd in ("run", "plan", "compare", "report"):
+        assert cmd in out
+    assert "examples:" in out
+
+
+def test_plan_and_compare_help(capsys):
+    from repro.core.main import plan_main
+    assert plan_main(["--help"]) == 0
+    assert "python -m repro plan --jobs 4" in capsys.readouterr().out
+    from repro.core.baseline import build_compare_parser
+    with pytest.raises(SystemExit) as e:
+        build_compare_parser().parse_args(["--help"])
+    assert e.value.code == 0
+    assert "history.jsonl" in capsys.readouterr().out
+
+
+def test_run_help_includes_scope_flags(capsys):
+    from repro.core.main import run_main
+    assert run_main(["--help"],
+                    scope_modules=["repro.scopes.example_scope"]) == 0
+    out = capsys.readouterr().out
+    assert "--jobs" in out
+    assert "scope flags" in out
+    assert "--benchmark_filter" in out or "--benchmark.filter" in out
