@@ -18,6 +18,9 @@ overhead + relative comparisons); TPU numbers are the modeled columns.
 
 Env knobs: ``BENCH_JOBS`` (worker parallelism, default 1 → inline),
 ``BENCH_SHARD_GRAIN`` (``auto``/``benchmark``/``scope``),
+``BENCH_PARAM`` (typed-parameter selection, space-separated
+``key=value`` pairs — e.g. ``BENCH_PARAM="dtype=bf16 backend=xla"``
+runs only matching instances of the typed parameter spaces),
 ``BENCH_RESULTS_DIR`` (persist shards + manifest + merged.json, and
 append the run to ``<dir>/history.jsonl``), ``BENCH_BASELINE``
 (baseline document/run dir/history.jsonl; adds a per-benchmark
@@ -36,6 +39,10 @@ def _derived(rec) -> str:
         v = rec.raw.get(key)
         if v:
             return f"{v * scale:.3f}{unit}"
+    ct = rec.raw.get("compile_time_s")
+    if ct:
+        # no natural rate: surface the warm-phase compile measurement
+        return f"{ct * 1e3:.3f}compile_ms"
     return ""
 
 
@@ -101,11 +108,17 @@ def run_all(min_time: float = 0.02):
     them — and ``scope_names`` is the ScopeManager's load order, so the
     harness can't silently miss a scope the binary knows about.
     """
-    from repro.core import REGISTRY, RunOptions
+    from repro.core import REGISTRY, RunOptions, parse_param_filter
     from repro.core.orchestrate import OrchestratorOptions, execute
     from repro.core.scope import ScopeManager
 
     jobs = int(os.environ.get("BENCH_JOBS", "1"))
+    try:
+        param_filter = parse_param_filter(
+            os.environ.get("BENCH_PARAM", "").split())
+    except ValueError as e:
+        import sys
+        sys.exit(f"BENCH_PARAM: {e}")
     REGISTRY.reset()
     mgr = ScopeManager()
     mgr.load(None)                       # BUILTIN_SCOPES — the Table IV set
@@ -114,7 +127,7 @@ def run_all(min_time: float = 0.02):
     opts = OrchestratorOptions(
         jobs=jobs,
         shard_grain=os.environ.get("BENCH_SHARD_GRAIN", "auto"),
-        run=RunOptions(min_time=min_time),
+        run=RunOptions(min_time=min_time, param_filter=param_filter),
         results_dir=os.environ.get("BENCH_RESULTS_DIR"),
     )
     result = execute(mgr, REGISTRY, opts,
@@ -169,10 +182,16 @@ def _report(result) -> None:
 def main() -> None:
     result, unavailable, scopes = run_all()
     verdicts = _baseline_verdicts(result.doc)
+    param_active = bool(os.environ.get("BENCH_PARAM", "").strip())
     docs = {}
     for scope in scopes:
         shard = result.shard(scope)
         if shard is None:
+            if scope not in unavailable and param_active:
+                # deselected, not broken: no instance matched BENCH_PARAM
+                print(f"{scope}/SKIPPED,0.00,no instance matches "
+                      f"BENCH_PARAM")
+                continue
             err = unavailable.get(scope, "not scheduled")
             last = err.strip().splitlines()[-1] if err else "not scheduled"
             print(f"{scope}/SCOPE_FAILED,0.00,{last}")

@@ -1,6 +1,12 @@
 """Characterization scenario: run three scopes, merge with scope_plot cat,
-filter, and produce a comparison bar chart — the paper's Fig. 1 data flow
-(SCOPE binary -> JSON -> ScopePlot) as a script.
+filter/select by typed parameter, and produce comparison charts — the
+paper's Fig. 1 data flow (SCOPE binary -> JSON -> ScopePlot) as a script.
+
+The instr scope's ops are one typed family (``instr/elementwise`` with
+an ``op`` axis), so the per-op latency chart comes from a single
+``group_by`` spec series instead of a regex per family clone, and the
+compile-vs-steady-state split the runner measures is printed per
+instance.
 
 Run:  PYTHONPATH=src python examples/characterize.py
 """
@@ -10,15 +16,17 @@ import os
 from repro.core import REGISTRY, RunOptions, run_benchmarks
 from repro.core.scope import ScopeManager
 from repro.scopeplot import BenchmarkFile, cat
-from repro.scopeplot.plot import quick_bar
+from repro.scopeplot.plot import quick_bar, render_spec
 
 
-def run_scope(name):
+def run_scope(name, param_filter=None):
     REGISTRY.reset()
     mgr = ScopeManager()
     mgr.load([f"repro.scopes.{name}_scope"])
     mgr.register_all()
-    doc = run_benchmarks(REGISTRY.filter(".*"), RunOptions(min_time=0.02),
+    doc = run_benchmarks(REGISTRY.filter(".*"),
+                         RunOptions(min_time=0.02,
+                                    param_filter=param_filter),
                          progress=False)
     return BenchmarkFile.from_dict(doc)
 
@@ -28,12 +36,38 @@ def main():
     merged = cat([run_scope(n) for n in ("instr", "histo", "linalg")])
     merged.save("results/characterize.json")
     print(f"{len(merged)} records from 3 scopes -> results/characterize.json")
-    fast = merged.without_errors().filter_name("instr/")
-    frame = fast.to_frame(["name", "real_time"])
+
+    # typed-parameter selection on the loaded document: the same
+    # axis:value components `--param op=exp` selects at run time
+    fast = merged.without_errors().filter_params({"op": ["exp", "tanh"]})
+    frame = fast.to_frame(["name", "real_time", "compile_time_s"])
     print(frame.sort_by("real_time").to_csv())
+
+    # compile vs steady state, per instance (the runner's warm phase)
+    for rec in merged.without_errors().without_aggregates():
+        ct = rec.get("compile_time_s")
+        if ct is not None:
+            steady = rec.real_time_seconds() or 0.0
+            print(f"{rec.name}: compile {ct * 1e3:.1f}ms, "
+                  f"steady {steady * 1e6:.1f}us")
+
     out = quick_bar("results/characterize.json", "name", "real_time",
                     title="instr scope op latencies",
                     output="results/characterize.png", regex="instr/")
+    print("wrote", out)
+
+    # series-by-param: ONE spec series expands into a plotted series
+    # per dtype of the single linalg/batched_matmul family
+    out = render_spec({
+        "title": "batched matmul by dtype",
+        "type": "grouped_bar",
+        "output": "results/characterize_dtypes.png",
+        "x_axis": {"label": "n"},
+        "y_axis": {"label": "time (us)"},
+        "series": [{"input_file": "results/characterize.json",
+                    "regex": "linalg/batched_matmul",
+                    "group_by": "dtype", "xfield": "n"}],
+    })
     print("wrote", out)
 
 

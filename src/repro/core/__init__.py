@@ -6,17 +6,21 @@ JSON reporting for independently-developed benchmark groups ("scopes").
 
 Public API surface for scope authors::
 
-    from repro.core import benchmark, State, Scope, FLAGS
+    from repro.core import ParamSpace, Scope, State, benchmark
 
     def _register(registry):
         @benchmark(scope="myscope", registry=registry)
         def my_bench(state: State):
+            x = state.fixture                  # from set_fixture(setup)
             while state.keep_running():
                 ...
+        my_bench.param_space(dtype=["f32", "bf16"], n=[256, 1024])
+        my_bench.set_fixture(lambda params: make_input(params))
 
     SCOPE = Scope(name="myscope", register=_register)
 """
-from .benchmark import Benchmark, State, SkipError
+from .benchmark import (Benchmark, ParamSpace, Params, State, SkipError,
+                        match_params, parse_param_filter)
 from .errorcheck import (ScopeError, check_compiles, check_finite,
                          check_shape, check_sharding, checked, sync)
 from .flags import FLAGS, FlagRegistry
@@ -34,7 +38,8 @@ from .scope import BUILTIN_SCOPES, Scope, ScopeManager
 from .sysinfo import TPU_V5E, build_context
 
 __all__ = [
-    "Benchmark", "State", "SkipError",
+    "Benchmark", "ParamSpace", "Params", "State", "SkipError",
+    "match_params", "parse_param_filter",
     "ScopeError", "check_compiles", "check_finite", "check_shape",
     "check_sharding", "checked", "sync",
     "FLAGS", "FlagRegistry", "HOOKS", "HookChain", "get_logger",

@@ -264,6 +264,26 @@ def load_document(path: str) -> Dict[str, Any]:
         return json.load(f)
 
 
+def filter_doc_params(doc: Dict[str, Any],
+                      param_filter: Optional[Dict[str, List[str]]]
+                      ) -> Dict[str, Any]:
+    """Keep only records whose name carries matching ``axis:value``
+    components (the ``--param`` selection applied to a document where
+    only names survive)."""
+    if not param_filter:
+        return doc
+    from .benchmark import match_params, name_params
+    return {
+        "context": doc.get("context", {}),
+        "benchmarks": [
+            rec for rec in doc.get("benchmarks", [])
+            if match_params(
+                name_params(rec.get("run_name") or rec.get("name", "")),
+                param_filter)
+        ],
+    }
+
+
 def save_baseline(doc: Dict[str, Any], path: str) -> None:
     parent = os.path.dirname(path)
     if parent:
@@ -295,14 +315,24 @@ def build_compare_parser() -> argparse.ArgumentParser:
     ap.add_argument("--sigmas", type=float, default=2.0,
                     help="pooled-stddev multiple the mean shift must clear "
                          "when repetition data exists (default 2.0)")
+    ap.add_argument("--param", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="compare only instances whose name carries the "
+                         "typed parameter KEY:VALUE (repeatable)")
     return ap
 
 
 def compare_main(argv: Optional[List[str]] = None) -> int:
+    from .benchmark import parse_param_filter
     ns = build_compare_parser().parse_args(argv)
     try:
-        base = load_document(ns.baseline)
-        new = load_document(ns.contender)
+        param_filter = parse_param_filter(ns.param)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    try:
+        base = filter_doc_params(load_document(ns.baseline), param_filter)
+        new = filter_doc_params(load_document(ns.contender), param_filter)
     except (OSError, json.JSONDecodeError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2

@@ -21,6 +21,8 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
         ("one scope, one benchmark family, plain GB-JSON to a file",
          "python -m repro run --enable-scope example "
          "--benchmark_filter example/saxpy --benchmark_out saxpy.json"),
+        ("run only the bf16 points of every typed parameter space",
+         "python -m repro run --param dtype=bf16 --jobs 2"),
         ("gate against the windowed run history (exit 1 on regression)",
          "python -m repro run --jobs 2 --baseline results/history.jsonl"),
         ("store this run as the baseline for later gating",
@@ -32,6 +34,8 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
          "python -m repro plan --jobs 4"),
         ("use a prior run's measured durations as cost hints",
          "python -m repro plan --jobs 4 --costs results/20260731T120000-42"),
+        ("plan only one backend's instances of the typed spaces",
+         "python -m repro plan --param backend=pallas"),
     ],
     "compare": [
         ("mean/stddev-aware diff of two runs (exit 1 on regression)",
@@ -40,6 +44,9 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
         ("diff the latest run against the windowed history baseline",
          "python -m repro compare results/history.jsonl "
          "results/20260731T120000-42 --threshold 0.05"),
+        ("compare only the bf16 instances of two runs",
+         "python -m repro compare results/baseline.json "
+         "results/20260731T120000-42 --param dtype=bf16"),
     ],
     "report": [
         ("render report/index.html + report.md for one run",

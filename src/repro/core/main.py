@@ -36,6 +36,7 @@ from . import logging as scope_logging
 from .baseline import (compare_documents, compare_main, format_comparisons,
                        gate_failures, load_document, save_baseline,
                        summarize)
+from .benchmark import parse_param_filter
 from .cli_examples import epilog
 from .flags import FLAGS
 from .hooks import HOOKS
@@ -116,6 +117,12 @@ def build_run_parser() -> argparse.ArgumentParser:
     sel.add_argument("--disable-scope", action="append", default=[],
                      help="disable these scopes (repeatable)")
     sel.add_argument("--list-scopes", action="store_true")
+    sel.add_argument("--param", action="append", default=[],
+                     metavar="KEY=VALUE",
+                     help="run only instances whose typed parameter KEY "
+                          "equals VALUE (repeatable; same KEY twice ORs "
+                          "the values, distinct KEYs AND together — e.g. "
+                          "--param dtype=bf16 --param backend=pallas)")
     sel.add_argument("--jobs", type=int, default=1,
                      help="run work in N parallel isolated workers")
     sel.add_argument("--isolate", default="auto",
@@ -172,6 +179,12 @@ def run_main(argv: List[str],
         return 0
     sel_ns, rest = sel.parse_known_args(argv)
 
+    try:
+        param_filter = parse_param_filter(sel_ns.param)
+    except ValueError as e:
+        log.error("%s", e)
+        return 2
+
     if sel_ns.resume and not sel_ns.results_dir:
         log.error("--resume requires --results-dir")
         return 2
@@ -203,14 +216,17 @@ def run_main(argv: List[str],
     mgr.register_all()
 
     pattern = FLAGS.get("benchmark_filter", ".*")
-    benches = REGISTRY.filter(pattern)
+    benches = REGISTRY.filter(pattern, params=param_filter)
     if FLAGS.get("benchmark_list_tests"):
+        from .benchmark import match_params
         for b in benches:
-            for name, _ in b.instances():
-                print(name)
+            for name, params in b.instances():
+                if match_params(params, param_filter):
+                    print(name)
         return 0
     if not benches:
-        log.error("no benchmarks match %r", pattern)
+        log.error("no benchmarks match %r%s", pattern,
+                  f" with --param {sel_ns.param}" if param_filter else "")
         return 1
     # don't dispatch workers for scopes the filter selects nothing from —
     # each would pay a fresh interpreter + JAX import to return 0 records
@@ -226,6 +242,7 @@ def run_main(argv: List[str],
         run=RunOptions(
             min_time=FLAGS.get("benchmark_min_time", 0.05),
             repetitions=FLAGS.get("benchmark_repetitions", 1),
+            param_filter=param_filter,
         ),
         flag_values={s.name: FLAGS.get(s.name) for s in FLAGS.declared()},
         results_dir=sel_ns.results_dir or None,
@@ -275,6 +292,10 @@ def build_plan_parser() -> argparse.ArgumentParser:
     ap.add_argument("--costs", default=None, metavar="PATH",
                     help="prior run directory or GB-JSON document used as "
                          "per-instance cost hints")
+    ap.add_argument("--param", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="plan only instances whose typed parameter KEY "
+                         "equals VALUE (repeatable)")
     return ap
 
 
@@ -293,6 +314,12 @@ def plan_main(argv: List[str],
         return 0
     ns, rest = ap.parse_known_args(argv)
 
+    try:
+        param_filter = parse_param_filter(ns.param)
+    except ValueError as e:
+        log.error("%s", e)
+        return 2
+
     mgr, rc = _setup_scopes(scope_modules, ns.enable_scope,
                             ns.disable_scope, rest)
     if mgr is None:
@@ -307,9 +334,11 @@ def plan_main(argv: List[str],
             log.warning("cost source %s unreadable (%s); planning without "
                         "hints", ns.costs, e)
     pattern = FLAGS.get("benchmark_filter", ".*")
-    plan = build_plan(mgr, REGISTRY, pattern, cost_hints=hints)
+    plan = build_plan(mgr, REGISTRY, pattern, cost_hints=hints,
+                      param_filter=param_filter)
     if not plan.items:
-        log.error("no benchmarks match %r", pattern)
+        log.error("no benchmarks match %r%s", pattern,
+                  f" with --param {ns.param}" if param_filter else "")
         return 1
 
     bins = plan.bins(ns.jobs)

@@ -777,7 +777,8 @@ def _execute_plan_grain(mgr, registry, opts: OrchestratorOptions,
             log.warning("cost source %s unreadable (%s); planning without "
                         "hints", opts.cost_source, e)
     plan = build_plan(mgr, registry, opts.benchmark_filter,
-                      cost_hints=cost_hints)
+                      cost_hints=cost_hints,
+                      param_filter=opts.run.param_filter)
     run_id = opts.run_id or default_run_id()
     out_dir = None
     if opts.results_dir:

@@ -55,7 +55,14 @@ def instance_id(name: str) -> str:
 
 @dataclass(frozen=True)
 class PlanItem:
-    """One addressable benchmark instance: (scope, family, arg-set)."""
+    """One addressable benchmark instance: (scope, family, params).
+
+    ``params`` is the instance's typed parameter point as (axis, value)
+    pairs in axis order — its canonical JSON is recorded in the
+    manifest, so instances stay addressable by parameter, not just by
+    name.  ``arg_set`` keeps the int-valued axes as a tuple (the legacy
+    view; identical to the old arg tuples for int-only families).
+    """
 
     instance_id: str
     name: str                      # GB instance name, e.g. "example/saxpy/n:256"
@@ -63,7 +70,11 @@ class PlanItem:
     family: str                    # registered family name, e.g. "example/saxpy"
     module: str                    # scope module ("<external>" → inline only)
     arg_set: Tuple[int, ...]
+    params: Tuple[Tuple[str, Any], ...] = ()
     cost: Optional[float] = None   # predicted seconds (None → plan default)
+
+    def params_dict(self) -> Dict[str, Any]:
+        return dict(self.params)
 
     def meta(self) -> Dict[str, Any]:
         return {
@@ -73,6 +84,7 @@ class PlanItem:
             "family": self.family,
             "module": self.module,
             "arg_set": list(self.arg_set),
+            "params": self.params_dict(),
             "cost": self.cost,
         }
 
@@ -81,6 +93,7 @@ class PlanItem:
         return cls(instance_id=m["instance_id"], name=m["name"],
                    scope=m["scope"], family=m["family"], module=m["module"],
                    arg_set=tuple(m.get("arg_set", ())),
+                   params=tuple((m.get("params") or {}).items()),
                    cost=m.get("cost"))
 
 
@@ -150,23 +163,39 @@ def scope_worklist(mgr) -> List[Tuple[str, str]]:
 
 
 def build_plan(mgr, registry, pattern: str = ".*",
-               cost_hints: Optional[Dict[str, float]] = None) -> Plan:
+               cost_hints: Optional[Dict[str, float]] = None,
+               param_filter: Optional[Dict[str, List[str]]] = None) -> Plan:
     """Enumerate the registered benchmarks into an ordered instance plan.
 
     ``mgr`` must be loaded/configured/registered.  Families are selected
     per scope with ``registry.filter`` (same semantics as a scope-grained
     run: a family whose name or any instance matches runs *all* its
     instances), then expanded instance by instance in sweep order.
+    ``param_filter`` (the ``--param key=value`` selection) prunes at the
+    *instance* level: only points whose typed parameters match are
+    planned.  Duplicate instance names — possible across families even
+    though each family rejects duplicate points — are a hard error here,
+    before they can collide as plan-ID duplicates.
     """
+    from .benchmark import match_params
     hints = cost_hints or {}
     items: List[PlanItem] = []
+    seen: Dict[str, str] = {}
     for scope_name, module in scope_worklist(mgr):
         for bench in registry.filter(pattern, scopes=[scope_name]):
-            for name, arg_set in bench.instances():
+            for name, params in bench.instances():
+                if not match_params(params, param_filter):
+                    continue
+                if name in seen:
+                    raise ValueError(
+                        f"duplicate benchmark instance name {name!r} "
+                        f"(families {seen[name]!r} and {bench.name!r})")
+                seen[name] = bench.name
                 items.append(PlanItem(
                     instance_id=instance_id(name),
                     name=name, scope=scope_name, family=bench.name,
-                    module=module, arg_set=tuple(arg_set),
+                    module=module, arg_set=params.int_values(),
+                    params=tuple(params.items()),
                     cost=hints.get(name),
                 ))
     default = DEFAULT_COST

@@ -14,7 +14,7 @@ from __future__ import annotations
 import re
 from typing import Callable, Dict, List, Optional, Sequence
 
-from .benchmark import Benchmark, BenchmarkFn
+from .benchmark import Benchmark, BenchmarkFn, match_params
 
 
 class BenchmarkRegistry:
@@ -34,18 +34,26 @@ class BenchmarkRegistry:
         return list(self._benchmarks.values())
 
     def filter(self, pattern: str = ".*",
-               scopes: Optional[Sequence[str]] = None) -> List[Benchmark]:
-        """Select benchmark families by name regex and/or owning scope."""
+               scopes: Optional[Sequence[str]] = None,
+               params: Optional[Dict[str, List[str]]] = None
+               ) -> List[Benchmark]:
+        """Select benchmark families by name regex, owning scope, and/or
+        a ``--param key=value`` predicate (family kept when *any* of its
+        instances carries a matching parameter point)."""
         rx = re.compile(pattern)
         out = []
         for b in self._benchmarks.values():
             if scopes is not None and b.scope not in scopes:
                 continue
+            instances = b.instances()
             # match either the family name or any instance name
-            if rx.search(b.name) or any(
-                rx.search(n) for n, _ in b.instances()
-            ):
-                out.append(b)
+            if not (rx.search(b.name) or any(
+                    rx.search(n) for n, _ in instances)):
+                continue
+            if params and not any(match_params(p, params)
+                                  for _, p in instances):
+                continue
+            out.append(b)
         return out
 
     def remove_scope(self, scope: str) -> None:

@@ -2,17 +2,29 @@
 
 Reimplements the run stage of the SCOPE binary (paper Fig. 2(d)):
 
-  * adaptive iteration counts — a batch of iterations grows geometrically
-    until measured wall time exceeds ``min_time`` (Google Benchmark's
-    algorithm), so fast benchmarks are timed over many iterations and slow
-    ones over few;
+  * fixture phase — a family's ``setup(params) -> ctx`` runs once per
+    instance, *untimed*, before anything is measured, so array
+    allocation and ``jax.jit`` construction never pollute the numbers;
+  * warm phase — the first call of the body is measured separately and
+    emitted as ``compile_time_s`` per instance: on a jax/pallas system
+    the first warm call is where tracing + XLA compilation happen, and
+    the compile-vs-steady-state split is a first-class measurement;
+  * adaptive iteration counts — a batch of iterations grows
+    geometrically until measured wall time exceeds ``min_time``
+    (Google Benchmark's algorithm), calibrated on *post-warm* batches
+    so compile time can't distort the batch size;
   * repetitions with mean/median/stddev aggregate records;
-  * results serialized in the Google Benchmark JSON schema (``context`` +
-    ``benchmarks[]``), unmodified counters inlined per record — the property
-    that makes ScopePlot "compatible with other tools that use that library";
+  * results serialized in the Google Benchmark JSON schema (``context``
+    + ``benchmarks[]``), counters inlined per record — the property
+    that makes ScopePlot "compatible with other tools that use that
+    library".  Counters that would shadow a canonical GB key
+    (``real_time``, ``iterations``, ...) are renamed
+    ``counter_<name>`` instead of silently corrupting the record;
   * two execution granularities: :func:`run_benchmarks` sweeps whole
-    families, :func:`run_single_instance` runs exactly one named instance —
-    the unit the plan-grained orchestrator (repro.core.plan) schedules.
+    families (honoring ``RunOptions.param_filter``, the ``--param
+    key=value`` selection), :func:`run_single_instance` runs exactly
+    one named instance — the unit the plan-grained orchestrator
+    (repro.core.plan) schedules.
 """
 from __future__ import annotations
 
@@ -23,11 +35,21 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, TextIO, Tuple
 
-from .benchmark import Benchmark, State, TIME_UNITS
+from .benchmark import (Benchmark, Params, State, TIME_UNITS, match_params)
 from .logging import get_logger
 from .sysinfo import build_context
 
 log = get_logger("runner")
+
+#: Canonical GB record keys — counters may not shadow these (a counter
+#: named ``real_time`` would silently overwrite the measurement).
+RESERVED_RECORD_KEYS = frozenset({
+    "name", "run_name", "run_type", "repetitions", "repetition_index",
+    "threads", "iterations", "real_time", "cpu_time", "time_unit",
+    "aggregate_name", "bytes_per_second", "items_per_second", "label",
+    "error_occurred", "error_message", "skipped", "skip_message",
+    "compile_time_s",
+})
 
 
 @dataclass
@@ -36,6 +58,8 @@ class RunOptions:
     repetitions: int = 1
     max_iterations: int = 1 << 22   # safety valve
     report_aggregates_only: bool = False
+    # --param key=value selection: axis name → accepted string values
+    param_filter: Optional[Dict[str, List[str]]] = None
 
 
 @dataclass
@@ -59,6 +83,7 @@ class RunRecord:
     error_message: Optional[str] = None
     skipped: bool = False
     skip_message: Optional[str] = None
+    compile_time_s: Optional[float] = None   # warm-phase first-call time
     counters: Dict[str, float] = field(default_factory=dict)
 
     def to_json(self) -> Dict[str, Any]:
@@ -88,12 +113,31 @@ class RunRecord:
         if self.skipped:
             d["skipped"] = True
             d["skip_message"] = self.skip_message
-        d.update(self.counters)       # GB inlines counters at top level
+        if self.compile_time_s is not None:
+            d["compile_time_s"] = self.compile_time_s
+        # GB inlines counters at top level; a counter shadowing a
+        # canonical key is renamed, never allowed to overwrite it
+        for key, value in self.counters.items():
+            if key in RESERVED_RECORD_KEYS:
+                log.warning("benchmark %s: counter %r shadows a canonical "
+                            "record key; renamed to %r", self.name, key,
+                            f"counter_{key}")
+                key = f"counter_{key}"
+            d[key] = value
         return d
 
 
-def _run_batch(bench: Benchmark, arg_set: Tuple[int, ...], n: int) -> State:
-    state = State(ranges=arg_set, max_iterations=n)
+def _as_params(bench: Benchmark, point) -> Params:
+    """Normalize a caller-supplied instance point to Params (accepts a
+    legacy int tuple for back-compat)."""
+    if isinstance(point, Params):
+        return point
+    return bench._legacy_params(tuple(point))
+
+
+def _run_batch(bench: Benchmark, params: Params, n: int,
+               fixture: Any = None) -> State:
+    state = State(max_iterations=n, params=params, fixture=fixture)
     bench.fn(state)
     return state
 
@@ -102,27 +146,46 @@ def _time_of(state: State, bench: Benchmark) -> float:
     return state.manual_elapsed if bench.use_manual_time else state.elapsed
 
 
-def run_instance(bench: Benchmark, arg_set: Tuple[int, ...],
-                 opts: RunOptions) -> List[RunRecord]:
-    """Run one (family × arg-set) instance: calibrate, repeat, aggregate."""
-    name = bench.instance_name(arg_set)
+def run_instance(bench: Benchmark, point, opts: RunOptions
+                 ) -> List[RunRecord]:
+    """Run one (family × params) instance: fixture, warm, calibrate,
+    repeat, aggregate."""
+    params = _as_params(bench, point)
+    name = bench.instance_name(params if bench.space is not None
+                               else tuple(params.values()))
     min_time = bench.min_time if bench.min_time is not None else opts.min_time
     reps = bench.repetitions if bench.repetitions is not None else opts.repetitions
     unit_scale = TIME_UNITS[bench.unit]
 
+    # -- fixture: setup(params) -> ctx, untimed --------------------------
+    fixture = None
+    if bench.fixture is not None:
+        try:
+            fixture = bench.fixture(params)
+        except Exception as e:  # noqa: BLE001 - isolate fixture failures
+            st = State(params=params)
+            st.skip_with_error(f"fixture failed: {e!r}")
+            return [_error_record(bench, name, st, reps)]
+
+    # -- warm phase: first call measured separately ----------------------
+    # On jax the first call traces + compiles; its wall time is the
+    # compile_time_s record.  The warm batch never feeds calibration.
+    t0 = time.perf_counter()
+    warm = _run_batch(bench, params, 1, fixture)
+    compile_s = time.perf_counter() - t0
+    if warm.error_occurred or warm.skipped:
+        return [_error_record(bench, name, warm, reps)]
+
     # -- calibration: grow n until elapsed >= min_time -----------------
     if bench.iterations is not None:
         n = bench.iterations
-        warm = _run_batch(bench, arg_set, n)
-        if warm.error_occurred or warm.skipped:
-            return [_error_record(bench, name, warm, reps)]
     else:
         n = 1
         while True:
-            warm = _run_batch(bench, arg_set, n)
-            if warm.error_occurred or warm.skipped:
-                return [_error_record(bench, name, warm, reps)]
-            t = _time_of(warm, bench)
+            cal = _run_batch(bench, params, n, fixture)
+            if cal.error_occurred or cal.skipped:
+                return [_error_record(bench, name, cal, reps)]
+            t = _time_of(cal, bench)
             if t >= min_time or n >= opts.max_iterations:
                 break
             if t <= 0:
@@ -136,7 +199,7 @@ def run_instance(bench: Benchmark, arg_set: Tuple[int, ...],
     records: List[RunRecord] = []
     per_iter_times: List[float] = []
     for rep in range(reps):
-        st = _run_batch(bench, arg_set, n)
+        st = _run_batch(bench, params, n, fixture)
         if st.error_occurred or st.skipped:
             records.append(_error_record(bench, name, st, reps, rep))
             continue
@@ -151,6 +214,7 @@ def run_instance(bench: Benchmark, arg_set: Tuple[int, ...],
             time_unit=bench.unit,
             repetitions=reps, repetition_index=rep,
             label=st.label or None,
+            compile_time_s=compile_s,
             counters=dict(st.counters),
         )
         if st.bytes_processed:
@@ -198,18 +262,18 @@ def run_single_instance(benches: Sequence[Benchmark], instance_name: str,
 
     The plan-grained orchestrator's unit of work (repro.core.plan):
     ``instance_name`` is a Google-Benchmark display name
-    (``scope/family/arg0/...``), matched against every instance of
-    ``benches``.  Crashes degrade to an error record, like
+    (``scope/family/axis:value/...``), matched against every instance
+    of ``benches``.  Crashes degrade to an error record, like
     :func:`run_benchmarks`; an unknown name raises ``KeyError`` so the
     caller can tell "no such instance" apart from "instance failed".
     """
     opts = opts or RunOptions()
     for bench in benches:
-        for name, arg_set in bench.instances():
+        for name, params in bench.instances():
             if name != instance_name:
                 continue
             try:
-                records = run_instance(bench, arg_set, opts)
+                records = run_instance(bench, params, opts)
             except Exception as e:  # noqa: BLE001 - isolate benchmark crashes
                 log.error("benchmark %s crashed: %s", name, e)
                 st = State()
@@ -226,16 +290,22 @@ def run_benchmarks(benches: Sequence[Benchmark],
                    opts: Optional[RunOptions] = None,
                    context_extra: Optional[Dict[str, Any]] = None,
                    progress: bool = True) -> Dict[str, Any]:
-    """Run benchmark families; return the full GB-JSON document as a dict."""
+    """Run benchmark families; return the full GB-JSON document as a dict.
+
+    Instances not matching ``opts.param_filter`` (the ``--param``
+    selection) are skipped without a record — selection, not failure.
+    """
     opts = opts or RunOptions()
     all_records: List[RunRecord] = []
     t0 = time.perf_counter()
     for bench in benches:
-        for name, arg_set in bench.instances():
+        for name, params in bench.instances():
+            if not match_params(params, opts.param_filter):
+                continue
             if progress:
                 log.info("running %s", name)
             try:
-                all_records.extend(run_instance(bench, arg_set, opts))
+                all_records.extend(run_instance(bench, params, opts))
             except Exception as e:  # noqa: BLE001 - isolate benchmark crashes
                 log.error("benchmark %s crashed: %s", name, e)
                 st = State()

@@ -20,6 +20,7 @@ _STANDARD_FIELDS = {
     "threads", "iterations", "real_time", "cpu_time", "time_unit",
     "aggregate_name", "bytes_per_second", "items_per_second", "label",
     "error_occurred", "error_message", "skipped", "skip_message",
+    "compile_time_s",
 }
 
 
@@ -69,6 +70,19 @@ class BenchmarkRecord:
             if ":" in part or part.replace(".", "", 1).isdigit():
                 out.append(part)
         return out
+
+    @property
+    def params(self) -> Dict[str, str]:
+        """Typed parameters parsed back out of the instance name: every
+        ``axis:value`` component as a string-valued mapping.
+
+        Parsed from ``run_name`` (falling back to ``name``) so aggregate
+        records — whose display name carries a ``_mean``/``_stddev``
+        suffix — resolve to their instance's parameters, not to a
+        corrupted trailing axis value.
+        """
+        from repro.core.benchmark import name_params
+        return name_params(self.raw.get("run_name") or self.name)
 
     def arg(self, key_or_index: Union[str, int]) -> Optional[str]:
         parts = self.args()
@@ -130,6 +144,31 @@ class BenchmarkFile:
             context=self.context,
             records=[r for r in self.records if rx.search(r.name)],
         )
+
+    def filter_params(self, params: Dict[str, Any]) -> "BenchmarkFile":
+        """Keep records whose name carries every ``axis:value`` pair
+        (values compared as strings; a list of values ORs together) —
+        the ``--param`` selection applied to a loaded document."""
+        def keep(r: BenchmarkRecord) -> bool:
+            have = r.params
+            for k, want in params.items():
+                accepted = [str(v) for v in (
+                    want if isinstance(want, (list, tuple)) else [want])]
+                if have.get(k) not in accepted:
+                    return False
+            return True
+        return BenchmarkFile(context=self.context,
+                             records=[r for r in self.records if keep(r)])
+
+    def param_values(self, key: str) -> List[str]:
+        """Distinct values of one parameter axis, in first-seen order —
+        what a ``group_by`` spec series expands over."""
+        out: List[str] = []
+        for r in self.records:
+            v = r.params.get(key)
+            if v is not None and v not in out:
+                out.append(v)
+        return out
 
     def without_aggregates(self) -> "BenchmarkFile":
         return BenchmarkFile(

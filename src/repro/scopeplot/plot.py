@@ -18,6 +18,16 @@ transformations, and styling.  Mirrors ScopePlot's spec schema::
         yfield: bytes_per_second
         yscale: 1.0e-9
 
+Typed parameter spaces (repro.core.benchmark.ParamSpace) make two more
+series keys useful:
+
+  * ``params: {axis: value}`` — keep only records whose name carries
+    the ``axis:value`` component(s) (a value list ORs together);
+  * ``group_by: axis`` — expand this series into one plotted series
+    per distinct value of the axis, so *one* spec plots e.g. dtype as
+    series instead of a hand-written series per family clone
+    (unavailable for ``timeseries``, which reads history.jsonl).
+
 Plot types (full schema reference: ``docs/scopeplot.md``):
 
   * ``line`` — line with error bars (stddev aggregates when present);
@@ -124,6 +134,20 @@ def load_spec(path: str) -> Dict[str, Any]:
         if not s.get("input_file"):
             raise SpecError(path, sline,
                             f"series[{i}] needs an 'input_file'")
+        if "params" in s and not isinstance(s["params"], dict):
+            raise SpecError(path, sline,
+                            f"series[{i}] 'params' must be a mapping "
+                            f"(got {type(s['params']).__name__})")
+        if "group_by" in s:
+            if not isinstance(s["group_by"], str):
+                raise SpecError(path, sline,
+                                f"series[{i}] 'group_by' must be an axis "
+                                f"name (got {type(s['group_by']).__name__})")
+            if ptype == "timeseries":
+                raise SpecError(path, sline,
+                                f"series[{i}]: 'group_by' is not available "
+                                "for timeseries specs (history records "
+                                "already plot one line per benchmark)")
     if ptype == "speedup":
         base = spec.get("baseline")
         if not isinstance(base, dict) or not base.get("input_file"):
@@ -158,6 +182,8 @@ def _series_xy(series: Dict[str, Any], base_dir: str = "."
     bf = load(path).without_errors()
     if "regex" in series:
         bf = bf.filter_name(series["regex"])
+    if "params" in series:
+        bf = bf.filter_params(series["params"])
     xs, ys = bf.xy(series.get("xfield", "name"),
                    series.get("yfield", "real_time"))
     xscale = float(series.get("xscale", 1.0))
@@ -181,12 +207,46 @@ def _mean_times(source: Dict[str, Any], base_dir: str) -> Dict[str, float]:
         .without_aggregates()
     if "regex" in source:
         bf = bf.filter_name(source["regex"])
+    if "params" in source:
+        bf = bf.filter_params(source["params"])
     pools: Dict[str, List[float]] = {}
     for r in bf.records:
         t = r.real_time_seconds()
         if t is not None:
             pools.setdefault(r.get("run_name") or r.name, []).append(t)
     return {name: sum(ts) / len(ts) for name, ts in pools.items() if ts}
+
+
+def _expand_group_by(spec: Dict[str, Any], base_dir: str
+                     ) -> Dict[str, Any]:
+    """Expand every ``group_by: axis`` series into one concrete series
+    per distinct value of that axis (series-by-param: one spec plots
+    dtype as series instead of a series per family clone)."""
+    if not any("group_by" in s for s in spec.get("series", [])):
+        return spec
+    out: List[Dict[str, Any]] = []
+    for series in spec["series"]:
+        key = series.get("group_by")
+        if not key:
+            out.append(series)
+            continue
+        bf = load(_resolve(series["input_file"], base_dir))
+        if "regex" in series:
+            bf = bf.filter_name(series["regex"])
+        if "params" in series:
+            bf = bf.filter_params(series["params"])
+        values = bf.param_values(key)
+        base_label = series.get("label")
+        for value in values:
+            expanded = {k: v for k, v in series.items() if k != "group_by"}
+            expanded["params"] = {**series.get("params", {}), key: value}
+            expanded["label"] = (f"{base_label} {key}:{value}"
+                                 if base_label else f"{key}:{value}")
+            out.append(expanded)
+        if not values:
+            out.append({k: v for k, v in series.items()
+                        if k != "group_by"})
+    return {**spec, "series": out}
 
 
 def _category(x: Any) -> str:
@@ -365,6 +425,8 @@ def render_spec(spec: Dict[str, Any], output: Optional[str] = None,
     if ptype not in _RENDERERS:
         raise SpecError("<spec>", 0, f"unknown plot type {ptype!r} "
                         "(expected one of: " + ", ".join(PLOT_TYPES) + ")")
+    if ptype != "timeseries":
+        spec = _expand_group_by(spec, base_dir)
     fig, ax = plt.subplots(figsize=spec.get("figsize", (7, 4.5)))
     _RENDERERS[ptype](ax, spec, base_dir)
 

@@ -271,11 +271,23 @@ def _fmt_mean(mean: Optional[float]) -> str:
     return _fmt_time(mean) if mean is not None else "-"
 
 
+def _compile_times(doc: Dict[str, Any]) -> Dict[str, float]:
+    """run_name → warm-phase ``compile_time_s`` (first record wins)."""
+    out: Dict[str, float] = {}
+    for rec in doc.get("benchmarks", []):
+        ct = rec.get("compile_time_s")
+        name = rec.get("run_name") or rec.get("name", "")
+        if ct is not None and name not in out:
+            out[name] = float(ct)
+    return out
+
+
 def _verdict_rows(doc: Dict[str, Any],
                   run_records: List[Dict[str, Any]]
                   ) -> List[List[str]]:
-    """benchmark | mean | stddev | n | vs previous | ratio."""
+    """benchmark | mean | stddev | n | compile | vs previous | ratio."""
     by_name = {r["name"]: r for r in run_records}
+    compile_by_name = _compile_times(doc)
     rows: List[List[str]] = []
     for name, st in collect_stats(doc).items():
         rec = by_name.get(name, {})
@@ -285,6 +297,7 @@ def _verdict_rows(doc: Dict[str, Any],
             name, _fmt_mean(mean),
             _fmt_time(st.stddev) if st.n > 1 else "-",
             str(st.n),
+            _fmt_mean(compile_by_name.get(name)),
             rec.get("verdict", "-"),
             f"{ratio:.2f}x" if ratio is not None else "-",
         ])
@@ -405,8 +418,9 @@ def generate_run_report(run_dir: str, history_file: Optional[str] = None,
     else:
         verdicts.text("No history records for this run — verdicts appear "
                       "once the run is recorded in history.jsonl.")
-    verdicts.table(["benchmark", "mean", "stddev", "n", "vs previous",
-                    "ratio"], _verdict_rows(bf.to_dict(), run_records))
+    verdicts.table(["benchmark", "mean", "stddev", "n", "compile",
+                    "vs previous", "ratio"],
+                   _verdict_rows(bf.to_dict(), run_records))
     sections.append(verdicts)
     sections.append(_drift_section(scoped_records, window))
 

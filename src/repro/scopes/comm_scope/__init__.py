@@ -9,13 +9,14 @@ same axis at different abstraction levels:
     host devices);
   * modeled  — analytic v5e ICI cost for the production meshes
     (ring all-reduce 2(n-1)/n, all-gather (n-1)/n, all-to-all (n-1)/n²)
-    so the numbers feeding §Roofline are explicit and testable.
+    so the numbers feeding §Roofline are explicit and testable; one
+    typed family with a ``kind`` axis covers every collective.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Scope, State, benchmark, sync
+from repro.core import ParamSpace, Scope, State, benchmark, sync
 from repro.core.compat import shard_map
 from repro.core.registry import BenchmarkRegistry
 from repro.core.sysinfo import TPU_V5E
@@ -64,31 +65,27 @@ def _register(registry: BenchmarkRegistry) -> None:
     all_reduce_measured.range_multiplier_args(1 << 16, 1 << 22, mult=8)
     all_reduce_measured.set_arg_names(["bytes"])
 
-    def modeled(state: State, kind: str):
-        nbytes = state.range(0)
-        axis = state.range(1)
-        t = modeled_collective_seconds(kind, nbytes, axis)
+    @benchmark(scope=NAME, registry=registry)
+    def collective_modeled_v5e(state: State):
+        """Analytic v5e ICI collective over one mesh axis — the ``kind``
+        axis replaces four per-collective family clones (feeds the
+        §Roofline collective term)."""
+        p = state.params
+        t = modeled_collective_seconds(p.kind, p.bytes, p.axis)
         state.set_iteration_time(t)
         while state.keep_running():
             state.set_iteration_time(t)
         state.counters["modeled_s"] = t
-        state.counters["axis_size"] = axis
-        state.set_bytes_processed(nbytes)
+        state.counters["axis_size"] = p.axis
+        state.set_bytes_processed(p.bytes)
 
-    for kind in ("all_reduce", "all_gather", "reduce_scatter", "all_to_all"):
-        def make(kind=kind):
-            def bench(state: State):
-                modeled(state, kind)
-            bench.__name__ = f"{kind}_modeled_v5e"
-            bench.__doc__ = (f"Analytic v5e ICI {kind} over one mesh axis "
-                             "(feeds the §Roofline collective term).")
-            return bench
-        b = benchmark(scope=NAME, registry=registry)(make())
-        b.args_product([[1 << 20, 1 << 24, 1 << 28], [16, 256]])
-        b.set_arg_names(["bytes", "axis"])
-        b.manual_time().set_iterations(1)
+    collective_modeled_v5e.param_space(
+        kind=["all_reduce", "all_gather", "reduce_scatter", "all_to_all"],
+        bytes=[1 << 20, 1 << 24, 1 << 28],
+        axis=[16, 256])
+    collective_modeled_v5e.manual_time().set_iterations(1)
 
 
-SCOPE = Scope(name=NAME, version="1.0.0",
+SCOPE = Scope(name=NAME, version="2.0.0",
               description="Interconnect collectives: measured + v5e model",
               register=_register)

@@ -11,9 +11,13 @@ Demonstrates every required or suggested structure for a new scope:
   4. an init hook that makes the binary exit during initialization when
      ``--example.exit_code`` is given (exactly what the paper's
      Example|Scope does) — *optional*;
-  5. per-benchmark documentation in docstrings — *optional*.
+  5. per-benchmark documentation in docstrings — *optional*;
+  6. a typed parameter space with a fixture (``axpy``): a ``dtype``
+     axis instead of per-dtype family clones, with array allocation in
+     ``setup(params)`` so it never pollutes the timed region —
+     *recommended for new benchmarks*.
 """
-from repro.core import FLAGS, Scope, State, benchmark
+from repro.core import FLAGS, ParamSpace, Scope, State, benchmark
 from repro.core.flags import FlagRegistry
 from repro.core.registry import BenchmarkRegistry
 
@@ -59,6 +63,25 @@ def _register(registry: BenchmarkRegistry) -> None:
         state.set_items_processed(n)
     saxpy.range_multiplier_args(1 << 8, 1 << 16, mult=4)
     saxpy.set_arg_names(["n"])
+
+    _DTYPES = {"f32": np.float32, "f64": np.float64}
+
+    def axpy_setup(params):
+        dt = _DTYPES[params.dtype]
+        return np.ones(params.n, dt), np.ones(params.n, dt)
+
+    @benchmark(scope=NAME, registry=registry)
+    def axpy(state: State):
+        """Typed-axis a*x+y: ``dtype`` is a named axis (no per-dtype
+        family clones) and the arrays come from the fixture, untimed."""
+        x, y = state.fixture
+        while state.keep_running():
+            y = 2.0 * x + y
+        itemsize = x.dtype.itemsize
+        state.set_bytes_processed(3 * itemsize * state.params.n)
+        state.set_items_processed(state.params.n)
+    axpy.param_space(ParamSpace.product(dtype=list(_DTYPES), n=[1 << 14]))
+    axpy.set_fixture(axpy_setup)
 
 
 SCOPE = Scope(

@@ -1,42 +1,49 @@
 """Histo|Scope — GPU histogramming (paper Table IV), TPU-adapted.
 
-Compares jnp.bincount (XLA scatter-add) against the Pallas one-hot-matmul
-kernel (repro.kernels.histogram) across input sizes and bin counts.
+One ``histogram`` family with a typed ``backend`` axis compares
+jnp.bincount (XLA scatter-add) against the Pallas one-hot-matmul kernel
+(repro.kernels.histogram) across input sizes and bin counts — the
+per-backend family clones collapsed into a single parameter space.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import Scope, State, benchmark, sync
+from repro.core import ParamSpace, Scope, State, benchmark, sync
 from repro.core.registry import BenchmarkRegistry
 
 NAME = "histo"
 
 
 def _register(registry: BenchmarkRegistry) -> None:
+    def histogram_setup(params):
+        x = jax.random.randint(jax.random.PRNGKey(0), (params.n,), 0,
+                               params.bins)
+        if params.backend == "xla":
+            bins = params.bins
+            return jax.jit(lambda x: jnp.bincount(x, length=bins)), x
+        from repro.kernels.histogram import histogram as pallas_hist
+        return (lambda x: pallas_hist(x, params.bins, chunk=4096)), x
+
     @benchmark(scope=NAME, registry=registry)
-    def bincount_xla(state: State):
-        n, bins = state.range(0), state.range(1)
-        x = jax.random.randint(jax.random.PRNGKey(0), (n,), 0, bins)
-        fn = jax.jit(lambda x: jnp.bincount(x, length=bins))
-        sync(fn(x))
+    def histogram(state: State):
+        """Histogramming through the selected backend (XLA scatter vs
+        Pallas one-hot matmul)."""
+        fn, x = state.fixture
         while state.keep_running():
             sync(fn(x))
-        state.set_items_processed(n)
-    bincount_xla.args_product([[1 << 16, 1 << 20], [256, 4096]])
-    bincount_xla.set_arg_names(["n", "bins"])
+        state.set_items_processed(state.params.n)
 
-    @benchmark(scope=NAME, registry=registry)
-    def histogram_pallas(state: State):
-        from repro.kernels.histogram import histogram
-        n, bins = state.range(0), state.range(1)
-        x = jax.random.randint(jax.random.PRNGKey(0), (n,), 0, bins)
-        sync(histogram(x, bins, chunk=4096))
-        while state.keep_running():
-            sync(histogram(x, bins, chunk=4096))
-        state.set_items_processed(n)
-    histogram_pallas.args([1 << 16, 256]).set_arg_names(["n", "bins"])
+    # pallas (interpret mode on CPU) stays one small point; the XLA path
+    # sweeps the full size × bins grid
+    histogram.param_space(
+        ParamSpace.product(backend=["xla", "pallas"],
+                           n=[1 << 16, 1 << 20],
+                           bins=[256, 4096])
+        .where(lambda p: p.backend == "xla"
+               or (p.n == 1 << 16 and p.bins == 256)))
+    histogram.set_fixture(histogram_setup)
 
 
-SCOPE = Scope(name=NAME, version="1.0.0",
+SCOPE = Scope(name=NAME, version="2.0.0",
               description="histogramming: XLA scatter vs Pallas one-hot",
               register=_register)

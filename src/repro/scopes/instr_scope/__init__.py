@@ -2,11 +2,15 @@
 
 Elementwise transcendentals, reductions, dtype conversions at fixed array
 size: the per-op cost floor that model-level numbers decompose into.
+One ``elementwise`` family sweeps a typed ``op`` axis instead of seven
+generated per-op family clones; the fixture builds the input array and
+the jitted op untimed, so the warm phase isolates trace+compile into
+``compile_time_s``.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import Scope, State, benchmark, sync
+from repro.core import ParamSpace, Scope, State, benchmark, sync
 from repro.core.registry import BenchmarkRegistry
 
 NAME = "instr"
@@ -23,22 +27,22 @@ _OPS = {
 
 
 def _register(registry: BenchmarkRegistry) -> None:
-    for opname, op in _OPS.items():
-        def make(op=op, opname=opname):
-            def bench(state: State):
-                n = state.range(0)
-                x = jnp.linspace(0.1, 1.0, n, dtype=jnp.float32)
-                fn = jax.jit(op)
-                sync(fn(x))
-                while state.keep_running():
-                    sync(fn(x))
-                state.set_items_processed(n)
-                state.set_bytes_processed(8 * n)
-            bench.__name__ = opname
-            bench.__doc__ = f"elementwise {opname} throughput"
-            return bench
-        b = benchmark(scope=NAME, registry=registry)(make())
-        b.args([1 << 20]).set_arg_names(["n"])
+    def elementwise_setup(params):
+        x = jnp.linspace(0.1, 1.0, params.n, dtype=jnp.float32)
+        return jax.jit(_OPS[params.op]), x
+
+    @benchmark(scope=NAME, registry=registry)
+    def elementwise(state: State):
+        """Elementwise op throughput; the ``op`` axis selects the
+        primitive."""
+        fn, x = state.fixture
+        while state.keep_running():
+            sync(fn(x))
+        state.set_items_processed(state.params.n)
+        state.set_bytes_processed(8 * state.params.n)
+    elementwise.param_space(
+        ParamSpace.product(op=list(_OPS), n=[1 << 20]))
+    elementwise.set_fixture(elementwise_setup)
 
     @benchmark(scope=NAME, registry=registry)
     def reduce_sum(state: State):
@@ -63,5 +67,5 @@ def _register(registry: BenchmarkRegistry) -> None:
     convert_f32_bf16.args([1 << 20]).set_arg_names(["n"])
 
 
-SCOPE = Scope(name=NAME, version="1.0.0",
+SCOPE = Scope(name=NAME, version="2.0.0",
               description="per-op latencies/throughput", register=_register)

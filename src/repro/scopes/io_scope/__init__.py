@@ -1,5 +1,7 @@
 """I/O|Scope — disk I/O operations (paper Table IV): checkpoint +
-data-pipeline throughput of the production substrates."""
+data-pipeline throughput of the production substrates.  The checkpoint
+save/restore family clones are one typed ``checkpoint`` family with an
+``op`` axis."""
 import os
 import tempfile
 
@@ -7,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Scope, State, benchmark
+from repro.core import ParamSpace, Scope, State, benchmark
 from repro.core.registry import BenchmarkRegistry
 
 NAME = "io"
@@ -15,30 +17,25 @@ NAME = "io"
 
 def _register(registry: BenchmarkRegistry) -> None:
     @benchmark(scope=NAME, registry=registry)
-    def checkpoint_save(state: State):
-        """Sharded-checkpoint write throughput (repro.checkpoint)."""
-        from repro.checkpoint import save_checkpoint
-        mb = state.range(0)
-        tree = {"w": jnp.ones((mb * 1024 * 256,), jnp.float32)}
-        with tempfile.TemporaryDirectory() as d:
-            i = 0
-            while state.keep_running():
-                save_checkpoint(os.path.join(d, f"ck{i}"), tree, step=i)
-                i += 1
-        state.set_bytes_processed(mb * 1024 * 1024)
-    checkpoint_save.args([4]).args([32]).set_arg_names(["MiB"])
-
-    @benchmark(scope=NAME, registry=registry)
-    def checkpoint_restore(state: State):
+    def checkpoint(state: State):
+        """Sharded-checkpoint save/restore throughput (repro.checkpoint);
+        the ``op`` axis selects the direction."""
         from repro.checkpoint import load_checkpoint, save_checkpoint
-        mb = state.range(0)
+        mb = state.params.MiB
         tree = {"w": jnp.ones((mb * 1024 * 256,), jnp.float32)}
         with tempfile.TemporaryDirectory() as d:
-            path = save_checkpoint(os.path.join(d, "ck"), tree, step=0)
-            while state.keep_running():
-                load_checkpoint(path, tree)
+            if state.params.op == "save":
+                i = 0
+                while state.keep_running():
+                    save_checkpoint(os.path.join(d, f"ck{i}"), tree, step=i)
+                    i += 1
+            else:
+                path = save_checkpoint(os.path.join(d, "ck"), tree, step=0)
+                while state.keep_running():
+                    load_checkpoint(path, tree)
         state.set_bytes_processed(mb * 1024 * 1024)
-    checkpoint_restore.args([4]).args([32]).set_arg_names(["MiB"])
+    checkpoint.param_space(
+        ParamSpace.product(op=["save", "restore"], MiB=[4, 32]))
 
     @benchmark(scope=NAME, registry=registry)
     def data_pipeline(state: State):
@@ -55,6 +52,6 @@ def _register(registry: BenchmarkRegistry) -> None:
     data_pipeline.args([512]).args([2048]).set_arg_names(["seq"])
 
 
-SCOPE = Scope(name=NAME, version="1.0.0",
+SCOPE = Scope(name=NAME, version="2.0.0",
               description="checkpoint + data-pipeline I/O",
               register=_register)

@@ -1,25 +1,36 @@
-"""LinAlg|Scope — linear-algebra operations (paper Table IV)."""
+"""LinAlg|Scope — linear-algebra operations (paper Table IV).
+
+``batched_matmul`` sweeps a typed ``dtype`` axis (f32 vs bf16 einsum)
+alongside the batch/size ints; the factorizations stay legacy int
+sweeps.
+"""
 import jax
 import jax.numpy as jnp
 
-from repro.core import Scope, State, benchmark, sync
+from repro.core import ParamSpace, Scope, State, benchmark, sync
 from repro.core.registry import BenchmarkRegistry
 
 NAME = "linalg"
 
+_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
 
 def _register(registry: BenchmarkRegistry) -> None:
+    def batched_matmul_setup(params):
+        x = jnp.ones((params.b, params.n, params.n), _DTYPES[params.dtype])
+        return jax.jit(lambda x: jnp.einsum("bij,bjk->bik", x, x)), x
+
     @benchmark(scope=NAME, registry=registry)
     def batched_matmul(state: State):
-        b, n = state.range(0), state.range(1)
-        x = jnp.ones((b, n, n), jnp.float32)
-        fn = jax.jit(lambda x: jnp.einsum("bij,bjk->bik", x, x))
-        sync(fn(x))
+        """Batched einsum matmul; ``dtype`` selects the accumulation
+        input precision."""
+        fn, x = state.fixture
         while state.keep_running():
             sync(fn(x))
-        state.set_items_processed(2 * b * n ** 3)
-    batched_matmul.args_product([[8], [128, 256]])
-    batched_matmul.set_arg_names(["b", "n"])
+        state.set_items_processed(2 * state.params.b * state.params.n ** 3)
+    batched_matmul.param_space(
+        ParamSpace.product(dtype=["f32", "bf16"], b=[8], n=[128, 256]))
+    batched_matmul.set_fixture(batched_matmul_setup)
 
     @benchmark(scope=NAME, registry=registry)
     def cholesky(state: State):
@@ -44,5 +55,5 @@ def _register(registry: BenchmarkRegistry) -> None:
     triangular_solve.args([256]).set_arg_names(["n"])
 
 
-SCOPE = Scope(name=NAME, version="1.0.0",
+SCOPE = Scope(name=NAME, version="2.0.0",
               description="linear algebra operations", register=_register)

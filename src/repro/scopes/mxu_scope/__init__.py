@@ -1,63 +1,68 @@
 """MXU|Scope — the TCU|Scope analogue (paper Table IV: "Nvidia GPU tensor
 cores" → TPU MXU systolic array).
 
-Benchmarks the matrix unit through three paths at each size/dtype:
-  * xla    — jnp.dot as XLA emits it (the production path);
-  * pallas — our explicitly-tiled kernel (repro.kernels.matmul), interpret
-             mode on CPU, native on TPU;
-and reports achieved FLOP/s plus (for the TPU target) the modeled roofline
-fraction at v5e peak.
+One ``matmul`` family benchmarks the matrix unit across typed axes —
+``backend`` (xla: jnp.dot as XLA emits it, the production path; pallas:
+our explicitly-tiled kernel, interpret mode on CPU, native on TPU),
+``dtype`` (f32, bf16 — the MXU-native dtype) and size ``n`` — instead
+of the three hand-copied per-variant families this scope used to carry.
+The fixture allocates operands and builds the jitted callable untimed;
+the runner's warm phase measures the first call (trace + XLA compile)
+as ``compile_time_s``, so the steady-state numbers never include
+compilation.  Reports achieved FLOP/s plus (for the TPU target) the
+modeled roofline fraction at v5e peak.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import Scope, State, benchmark, sync
+from repro.core import ParamSpace, Scope, State, benchmark, sync
 from repro.core.registry import BenchmarkRegistry
 from repro.core.sysinfo import TPU_V5E
 
 NAME = "mxu"
 
+_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
 
 def _register(registry: BenchmarkRegistry) -> None:
-    def run_matmul(state: State, fn, dtype):
-        n = state.range(0)
+    def setup(params):
+        n = params.n
+        dtype = _DTYPES[params.dtype]
+        if params.backend == "xla":
+            fn = jax.jit(jnp.dot)
+        else:
+            from repro.kernels.matmul import matmul as pallas_matmul
+            bm = min(256, n)
+            fn = lambda x, y: pallas_matmul(x, y, bm=bm, bn=bm, bk=bm)  # noqa: E731
         x = jnp.ones((n, n), dtype)
         y = jnp.ones((n, n), dtype)
-        sync(fn(x, y))                       # compile + warm
+        return fn, x, y
+
+    @benchmark(scope=NAME, registry=registry)
+    def matmul(state: State):
+        """Square matmul through the selected backend/dtype.  The pallas
+        rows are interpret-mode on CPU (correctness timing, not TPU
+        performance — the BlockSpec tiling is the artifact)."""
+        fn, x, y = state.fixture
         while state.keep_running():
             sync(fn(x, y))
+        n = state.params.n
         flops = 2.0 * n * n * n
         state.counters["flops_per_call"] = flops
         state.counters["model_roofline_s"] = flops / TPU_V5E["peak_bf16_flops"]
         state.set_items_processed(int(flops))
 
-    @benchmark(scope=NAME, registry=registry)
-    def matmul_xla_f32(state: State):
-        """Square f32 matmul via jnp.dot (XLA path)."""
-        run_matmul(state, jax.jit(jnp.dot), jnp.float32)
-    matmul_xla_f32.range_multiplier_args(256, 1024, mult=2)
-    matmul_xla_f32.set_arg_names(["n"])
-
-    @benchmark(scope=NAME, registry=registry)
-    def matmul_xla_bf16(state: State):
-        """Square bf16 matmul via jnp.dot — the MXU-native dtype."""
-        run_matmul(state, jax.jit(jnp.dot), jnp.bfloat16)
-    matmul_xla_bf16.range_multiplier_args(256, 1024, mult=2)
-    matmul_xla_bf16.set_arg_names(["n"])
-
-    @benchmark(scope=NAME, registry=registry)
-    def matmul_pallas(state: State):
-        """Tiled Pallas kernel (interpret-mode on CPU: correctness timing,
-        not TPU performance — the BlockSpec tiling is the artifact)."""
-        from repro.kernels.matmul import matmul
-        n = state.range(0)
-        run_matmul(state, lambda x, y: matmul(x, y, bm=min(256, n),
-                                              bn=min(256, n),
-                                              bk=min(256, n)), jnp.float32)
-    matmul_pallas.args([256]).set_arg_names(["n"])
+    # pallas stays a single f32/256 point (interpret mode is slow on CPU);
+    # the xla path sweeps the full dtype × size grid
+    matmul.param_space(
+        ParamSpace.product(backend=["xla", "pallas"],
+                           dtype=["f32", "bf16"],
+                           n=[256, 512, 1024])
+        .where(lambda p: p.backend == "xla"
+               or (p.dtype == "f32" and p.n == 256)))
+    matmul.set_fixture(setup)
 
 
-SCOPE = Scope(name=NAME, version="1.0.0",
+SCOPE = Scope(name=NAME, version="2.0.0",
               description="MXU/tensor-core matmul characterization",
               register=_register)

@@ -1,13 +1,14 @@
 """NN|Scope — the cuDNN|Scope analogue: neural-network op hot-spots.
 
 Layer-level bodies straight from the production model code: flash
-attention (XLA custom-VJP formulation), RMSNorm (XLA vs Pallas), MoE
-dispatch (scatter path), and the Mamba2 SSD chunk scan.
+attention (XLA custom-VJP formulation), RMSNorm (one typed family,
+``backend`` axis selecting XLA vs Pallas), MoE dispatch (scatter
+path), and the Mamba2 SSD chunk scan.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import Scope, State, benchmark, sync
+from repro.core import ParamSpace, Scope, State, benchmark, sync
 from repro.core.registry import BenchmarkRegistry
 
 NAME = "nn"
@@ -47,30 +48,27 @@ def _register(registry: BenchmarkRegistry) -> None:
             sync(fn(q, k, v))
     flash_attention_bwd.args([256]).args([512]).set_arg_names(["seq"])
 
-    @benchmark(scope=NAME, registry=registry)
-    def rmsnorm_xla(state: State):
-        n, d = state.range(0), state.range(1)
-        x = jnp.ones((n, d), jnp.float32)
-        p = {"scale": jnp.ones((d,), jnp.float32)}
-        fn = jax.jit(lambda x: L.rms_norm(p, x))
-        sync(fn(x))
-        while state.keep_running():
-            sync(fn(x))
-        state.set_bytes_processed(2 * 4 * n * d)
-    rmsnorm_xla.args_product([[4096], [1024, 4096]])
-    rmsnorm_xla.set_arg_names(["rows", "d"])
+    def rmsnorm_setup(params):
+        x = jnp.ones((params.rows, params.d), jnp.float32)
+        s = jnp.ones((params.d,), jnp.float32)
+        if params.backend == "xla":
+            p = {"scale": s}
+            return jax.jit(lambda x: L.rms_norm(p, x)), x
+        from repro.kernels.rmsnorm import rmsnorm
+        return (lambda x: rmsnorm(x, s, br=128)), x
 
     @benchmark(scope=NAME, registry=registry)
-    def rmsnorm_pallas(state: State):
-        from repro.kernels.rmsnorm import rmsnorm
-        n, d = state.range(0), state.range(1)
-        x = jnp.ones((n, d), jnp.float32)
-        s = jnp.ones((d,), jnp.float32)
-        sync(rmsnorm(x, s, br=128))
+    def rmsnorm(state: State):
+        """RMSNorm through the selected backend (XLA vs Pallas) — one
+        family, not a per-backend clone."""
+        fn, x = state.fixture
         while state.keep_running():
-            sync(rmsnorm(x, s, br=128))
-        state.set_bytes_processed(2 * 4 * n * d)
-    rmsnorm_pallas.args([1024, 1024]).set_arg_names(["rows", "d"])
+            sync(fn(x))
+        state.set_bytes_processed(2 * 4 * state.params.rows * state.params.d)
+    rmsnorm.param_space(
+        ParamSpace.product(backend=["xla"], rows=[4096], d=[1024, 4096])
+        + ParamSpace.cases({"backend": "pallas", "rows": 1024, "d": 1024}))
+    rmsnorm.set_fixture(rmsnorm_setup)
 
     @benchmark(scope=NAME, registry=registry)
     def moe_dispatch_scatter(state: State):
@@ -107,6 +105,6 @@ def _register(registry: BenchmarkRegistry) -> None:
     ssd_chunked_scan.args([1024]).args([4096]).set_arg_names(["seq"])
 
 
-SCOPE = Scope(name=NAME, version="1.0.0",
+SCOPE = Scope(name=NAME, version="2.0.0",
               description="NN-operation hot-spots (cuDNN|Scope analogue)",
               register=_register)

@@ -1,0 +1,497 @@
+"""Typed parameter spaces: ParamSpace composition, fixtures, the
+compile/run phase split, --param selection through every layer, and the
+legacy-compat goldens (byte-identical names, plan IDs and merged.json
+for int-only families)."""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core.benchmark import (Benchmark, ParamSpace, Params, State,
+                                  format_value, match_params, name_params,
+                                  parse_param_filter)
+from repro.core.flags import FlagRegistry
+from repro.core.hooks import HookChain
+from repro.core.plan import build_plan, instance_id
+from repro.core.registry import BenchmarkRegistry, benchmark
+from repro.core.runner import (RESERVED_RECORD_KEYS, RunOptions,
+                               run_benchmarks, run_single_instance)
+from repro.core.scope import ScopeManager
+
+
+def make_mgr(modules):
+    mgr = ScopeManager(registry=BenchmarkRegistry(), flags=FlagRegistry(),
+                       hooks=HookChain())
+    mgr.load(modules)
+    mgr.register_all()
+    return mgr
+
+
+# ---------------------------------------------------------------------------
+# ParamSpace composition
+# ---------------------------------------------------------------------------
+
+def test_product_orders_axes_by_keyword():
+    space = ParamSpace.product(dtype=["f32", "bf16"], n=[1, 2])
+    assert space.axes() == ["dtype", "n"]
+    assert [dict(p) for p in space] == [
+        {"dtype": "f32", "n": 1}, {"dtype": "f32", "n": 2},
+        {"dtype": "bf16", "n": 1}, {"dtype": "bf16", "n": 2}]
+
+
+def test_zip_requires_equal_lengths():
+    space = ParamSpace.zip(a=[1, 2], b=["x", "y"])
+    assert [dict(p) for p in space] == [{"a": 1, "b": "x"},
+                                        {"a": 2, "b": "y"}]
+    with pytest.raises(ValueError, match="equal lengths"):
+        ParamSpace.zip(a=[1, 2], b=["x"])
+
+
+def test_cases_where_mul_add():
+    space = (ParamSpace.product(backend=["xla", "pallas"], n=[256, 512])
+             .where(lambda p: p.backend == "xla" or p.n == 256))
+    assert len(space) == 3
+    crossed = ParamSpace.cases({"a": 1}) * ParamSpace.cases({"b": 2},
+                                                            {"b": 3})
+    assert [dict(p) for p in crossed] == [{"a": 1, "b": 2},
+                                          {"a": 1, "b": 3}]
+    with pytest.raises(ValueError, match="sharing axes"):
+        ParamSpace.cases({"a": 1}) * ParamSpace.cases({"a": 2})
+    summed = ParamSpace.cases({"a": 1}) + ParamSpace.cases({"a": 2})
+    assert len(summed) == 2
+
+
+def test_duplicate_points_rejected():
+    with pytest.raises(ValueError, match="duplicate parameter point"):
+        ParamSpace.cases({"n": 1}, {"n": 1})
+    with pytest.raises(ValueError, match="duplicate parameter point"):
+        ParamSpace.cases({"n": 1}) + ParamSpace.cases({"n": 1})
+
+
+def test_values_must_be_json_scalars():
+    with pytest.raises(TypeError, match="JSON-able scalar"):
+        ParamSpace.cases({"n": [1, 2]})
+    # all four scalar kinds render canonically in names
+    assert format_value(True) == "true"
+    assert format_value(256) == "256"
+    assert format_value("bf16") == "bf16"
+
+
+def test_params_access_and_identity():
+    p = Params({"dtype": "bf16", "n": 256, "fused": True})
+    assert p.dtype == "bf16" and p["n"] == 256
+    assert dict(p) == {"dtype": "bf16", "n": 256, "fused": True}
+    assert p.int_values() == (256,)          # bools are not ranges
+    assert p.canonical() == '{"dtype":"bf16","fused":true,"n":256}'
+    with pytest.raises(AttributeError, match="no parameter axis"):
+        p.missing
+    with pytest.raises(AttributeError):
+        p.dtype = "f32"
+
+
+# ---------------------------------------------------------------------------
+# Benchmark integration: naming, shim, mixing, duplicates
+# ---------------------------------------------------------------------------
+
+def test_typed_instance_names():
+    b = Benchmark("s/mm", lambda s: None)
+    b.param_space(ParamSpace.product(dtype=["f32", "bf16"], n=[256]))
+    assert [n for n, _ in b.instances()] == \
+        ["s/mm/dtype:f32/n:256", "s/mm/dtype:bf16/n:256"]
+
+
+def test_state_range_shim_over_int_axes():
+    got = {}
+
+    def body(state):
+        got["range0"] = state.range(0)
+        got["dtype"] = state.params.dtype
+        while state.keep_running():
+            pass
+
+    b = Benchmark("s/b", body)
+    b.param_space(dtype=["bf16"], n=[512])
+    doc = run_single_instance([b], "s/b/dtype:bf16/n:512",
+                              RunOptions(min_time=0.001))
+    assert got == {"range0": 512, "dtype": "bf16"}
+    assert doc["benchmarks"][0]["name"] == "s/b/dtype:bf16/n:512"
+
+
+def test_typed_and_legacy_sweeps_cannot_mix():
+    b = Benchmark("s/b", lambda s: None).args([1])
+    with pytest.raises(ValueError, match="typed or legacy"):
+        b.param_space(n=[1])
+    b2 = Benchmark("s/c", lambda s: None).param_space(n=[1])
+    with pytest.raises(ValueError, match="typed or legacy"):
+        b2.args([1])
+
+
+def test_duplicate_arg_sets_rejected_at_registration():
+    b = Benchmark("s/b", lambda s: None).args([8])
+    with pytest.raises(ValueError, match="duplicate arg-set"):
+        b.args([8])
+    with pytest.raises(ValueError, match="duplicate arg-set"):
+        Benchmark("s/c", lambda s: None).args_product([[1, 1], [2]])
+
+
+def test_set_unit_raises_value_error():
+    # was an assert, which `python -O` strips into silent corruption
+    with pytest.raises(ValueError, match="unknown time unit"):
+        Benchmark("s/b", lambda s: None).set_unit("parsec")
+
+
+def test_build_plan_rejects_cross_family_name_collisions():
+    mgr = make_mgr([])
+    from repro.core.scope import Scope
+
+    def _register(reg):
+        benchmark(name="f/n:1", scope="s", registry=reg)(lambda s: None)
+        benchmark(name="f", scope="s", registry=reg)(
+            lambda s: None).param_space(n=[1])
+    mgr.add_scope(Scope(name="s", register=_register))
+    mgr.register_all()
+    with pytest.raises(ValueError, match="duplicate benchmark instance"):
+        build_plan(mgr, mgr.registry)
+
+
+# ---------------------------------------------------------------------------
+# fixtures + compile/run phase separation
+# ---------------------------------------------------------------------------
+
+def test_fixture_runs_once_untimed_before_calibration():
+    setups = []
+
+    def setup(params):
+        setups.append(dict(params))
+        time.sleep(0.05)                       # must never be timed
+        return {"payload": params.n * 2}
+
+    def body(state):
+        assert state.fixture["payload"] == state.params.n * 2
+        while state.keep_running():
+            pass
+
+    b = Benchmark("s/b", body).param_space(n=[4]).set_fixture(setup)
+    doc = run_single_instance([b], "s/b/n:4", RunOptions(min_time=0.005))
+    rec = doc["benchmarks"][0]
+    assert setups == [{"n": 4}]                # once per instance
+    # timed mean is harness-loop fast — the 50ms setup stayed outside
+    assert rec["real_time"] < 1e3              # < 1ms in us units
+
+
+def test_fixture_failure_degrades_to_error_record():
+    def setup(params):
+        raise RuntimeError("no device")
+
+    b = Benchmark("s/b", lambda s: None).param_space(n=[1])
+    b.set_fixture(setup)
+    doc = run_single_instance([b], "s/b/n:1", RunOptions(min_time=0.001))
+    rec = doc["benchmarks"][0]
+    assert rec["error_occurred"] is True
+    assert "fixture failed" in rec["error_message"]
+
+
+def test_compile_time_recorded_per_instance():
+    first_call = {"done": False}
+
+    def body(state):
+        if not first_call["done"]:             # jit-compile stand-in
+            first_call["done"] = True
+            time.sleep(0.03)
+        while state.keep_running():
+            pass
+
+    b = Benchmark("s/b", body).param_space(n=[1])
+    doc = run_single_instance([b], "s/b/n:1", RunOptions(min_time=0.005))
+    rec = doc["benchmarks"][0]
+    # warm phase caught the one-off compile; steady-state did not
+    assert rec["compile_time_s"] >= 0.03
+    assert rec["real_time"] < 0.03 * 1e6       # us
+    # error records carry no compile time
+    bad = Benchmark("s/bad", lambda s: s.skip_with_error("x"))
+    bad.param_space(n=[1])
+    err = run_single_instance([bad], "s/bad/n:1", RunOptions())
+    assert "compile_time_s" not in err["benchmarks"][0]
+
+
+def test_counter_shadowing_canonical_key_is_renamed():
+    def body(state):
+        while state.keep_running():
+            pass
+        state.counters["real_time"] = 123.0    # hostile counter name
+        state.counters["good"] = 7.0
+
+    reg = BenchmarkRegistry()
+    benchmark(scope="t", registry=reg)(body).param_space(n=[1])
+    doc = run_benchmarks(reg.all(), RunOptions(min_time=0.001),
+                         progress=False)
+    rec = doc["benchmarks"][0]
+    assert rec["real_time"] != 123.0           # canonical key intact
+    assert rec["counter_real_time"] == 123.0   # data preserved, renamed
+    assert rec["good"] == 7.0
+    assert "real_time" in RESERVED_RECORD_KEYS
+    assert "compile_time_s" in RESERVED_RECORD_KEYS
+
+
+# ---------------------------------------------------------------------------
+# --param selection through every layer
+# ---------------------------------------------------------------------------
+
+def test_parse_and_match_param_filters():
+    flt = parse_param_filter(["dtype=bf16", "dtype=f32", "n=256"])
+    assert flt == {"dtype": ["bf16", "f32"], "n": ["256"]}
+    assert parse_param_filter([]) is None
+    with pytest.raises(ValueError, match="KEY=VALUE"):
+        parse_param_filter(["dtype"])
+    p = Params({"dtype": "bf16", "n": 256})
+    assert match_params(p, flt)                          # OR within key
+    assert not match_params(p, {"dtype": ["f64"]})
+    assert not match_params(p, {"backend": ["xla"]})     # missing axis
+    assert match_params(p, None)
+    assert name_params("s/f/dtype:bf16/n:256") == {"dtype": "bf16",
+                                                   "n": "256"}
+
+
+def test_registry_filter_and_runner_honor_params():
+    reg = BenchmarkRegistry()
+    benchmark(name="mm", scope="t", registry=reg)(
+        lambda s: None).param_space(dtype=["f32", "bf16"], n=[1])
+    benchmark(name="plain", scope="t", registry=reg)(lambda s: None)
+    flt = {"dtype": ["bf16"]}
+    assert [b.name for b in reg.filter(params=flt)] == ["t/mm"]
+    doc = run_benchmarks(reg.all(),
+                         RunOptions(min_time=0.001, param_filter=flt),
+                         progress=False)
+    assert [r["name"] for r in doc["benchmarks"]] == \
+        ["t/mm/dtype:bf16/n:1"]
+
+
+def test_build_plan_prunes_at_instance_level():
+    mgr = make_mgr(["repro.scopes.example_scope"])
+    plan = build_plan(mgr, mgr.registry, param_filter={"dtype": ["f64"]})
+    assert [i.name for i in plan.items] == \
+        ["example/axpy/dtype:f64/n:16384"]
+    assert plan.items[0].params_dict() == {"dtype": "f64", "n": 16384}
+    # legacy named axes are addressable the same way
+    plan2 = build_plan(mgr, mgr.registry, param_filter={"n": ["256"]})
+    assert [i.name for i in plan2.items] == ["example/saxpy/n:256"]
+
+
+def test_compare_cli_param_selection(tmp_path, capsys):
+    from repro.core.baseline import compare_main
+
+    def doc(us):
+        return {"context": {}, "benchmarks": [
+            {"name": n, "run_name": n, "run_type": "iteration",
+             "iterations": 1, "real_time": t, "cpu_time": t,
+             "time_unit": "us", "repetitions": 1, "repetition_index": 0,
+             "threads": 1} for n, t in us.items()]}
+
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    a.write_text(json.dumps(doc({"s/f/dtype:f32": 1.0,
+                                 "s/f/dtype:bf16": 1.0})))
+    b.write_text(json.dumps(doc({"s/f/dtype:f32": 99.0,   # regression
+                                 "s/f/dtype:bf16": 1.0})))
+    # full compare gates on the f32 regression; bf16-only compare passes
+    assert compare_main([str(a), str(b)]) == 1
+    capsys.readouterr()
+    assert compare_main([str(a), str(b), "--param", "dtype=bf16"]) == 0
+    out = capsys.readouterr().out
+    assert "dtype:bf16" in out and "dtype:f32" not in out
+
+
+# ---------------------------------------------------------------------------
+# legacy-compat goldens
+# ---------------------------------------------------------------------------
+
+# Recorded from the pre-ParamSpace seed: int-only families must keep
+# these exact names and plan IDs across the redesign (resumability and
+# history continuity depend on it).
+LEGACY_GOLDEN = {
+    "example/noop": "example_noop-a7aa4457",
+    "example/saxpy/n:256": "example_saxpy_n_256-8f19a9a1",
+    "example/saxpy/n:1024": "example_saxpy_n_1024-98cc1f8a",
+    "example/saxpy/n:4096": "example_saxpy_n_4096-4c8fd2a9",
+    "example/saxpy/n:16384": "example_saxpy_n_16384-22be85fe",
+    "example/saxpy/n:65536": "example_saxpy_n_65536-a88a80fa",
+}
+
+
+def test_legacy_int_families_keep_names_and_plan_ids():
+    mgr = make_mgr(["repro.scopes.example_scope"])
+    plan = build_plan(mgr, mgr.registry, pattern="noop|saxpy")
+    assert {i.name: i.instance_id for i in plan.items} == LEGACY_GOLDEN
+    # and the ID function itself is still name-derived
+    for name, iid in LEGACY_GOLDEN.items():
+        assert instance_id(name) == iid
+
+
+def _normalized_merged(doc):
+    """merged.json with volatile measurement fields zeroed — what must
+    be byte-identical across two runs of the same legacy plan."""
+    out = {"benchmarks": []}
+    for rec in doc["benchmarks"]:
+        r = dict(rec)
+        for k in ("real_time", "cpu_time", "compile_time_s",
+                  "bytes_per_second", "items_per_second", "iterations"):
+            r.pop(k, None)
+        out["benchmarks"].append(r)
+    return json.dumps(out, indent=2, sort_keys=True)
+
+
+def test_merged_json_byte_identical_for_legacy_families(tmp_path):
+    """Golden compat: two benchmark-grained runs of an int-only legacy
+    family produce byte-identical merged.json once measurement noise is
+    stripped — names, order, schema, params all stable."""
+    from repro.core.orchestrate import OrchestratorOptions, execute
+    docs = []
+    for run_id in ("g1", "g2"):
+        mgr = make_mgr(["repro.scopes.example_scope"])
+        res = execute(mgr, mgr.registry, OrchestratorOptions(
+            jobs=1, isolate="inline", shard_grain="benchmark",
+            benchmark_filter="saxpy",
+            run=RunOptions(min_time=0.001),
+            results_dir=str(tmp_path), run_id=run_id))
+        with open(os.path.join(res.out_dir, "merged.json")) as f:
+            docs.append(json.load(f))
+    assert _normalized_merged(docs[0]) == _normalized_merged(docs[1])
+    assert [r["name"] for r in docs[0]["benchmarks"]] == \
+        [n for n in LEGACY_GOLDEN if "saxpy" in n]
+    # manifest round-trips the typed view of the legacy axes
+    manifest = json.load(open(tmp_path / "g1" / "manifest.json"))
+    assert manifest["items"][0]["params"] == {"n": 256}
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: plan → shard → merge → history → report
+# ---------------------------------------------------------------------------
+
+def test_param_space_end_to_end(tmp_path):
+    """A typed family flows through the whole pipeline: plan grain
+    shards per instance, merged.json carries params + compile_time_s,
+    history round-trips the names, the report renders."""
+    from repro.core.orchestrate import OrchestratorOptions, execute
+    from repro.core import history as hist_mod
+    from repro.scopeplot.report import generate_run_report
+
+    results = tmp_path / "results"
+    for run_id in ("e2e-1", "e2e-2"):          # two runs → trend + verdicts
+        mgr = make_mgr(["repro.scopes.example_scope"])
+        res = execute(mgr, mgr.registry, OrchestratorOptions(
+            jobs=1, isolate="inline", shard_grain="benchmark",
+            benchmark_filter="axpy",           # matches axpy + saxpy
+            run=RunOptions(min_time=0.001),
+            results_dir=str(results), run_id=run_id))
+        assert all(r.status == "ok" for r in res.instances)
+
+    out = results / "e2e-2"
+    manifest = json.load(open(out / "manifest.json"))
+    typed = [i for i in manifest["items"]
+             if i["family"] == "example/axpy"]
+    assert [i["params"] for i in typed] == [
+        {"dtype": "f32", "n": 16384}, {"dtype": "f64", "n": 16384}]
+    # one shard per instance, named by the stable ID
+    for i in typed:
+        assert (out / i["shard"]).exists()
+
+    merged = json.load(open(out / "merged.json"))
+    by_name = {r["name"]: r for r in merged["benchmarks"]}
+    for name in ("example/axpy/dtype:f32/n:16384",
+                 "example/axpy/dtype:f64/n:16384"):
+        assert by_name[name]["compile_time_s"] > 0
+
+    # history: typed names round-trip, second run gets a verdict
+    records = hist_mod.load_history(str(results / "history.jsonl"))
+    series = hist_mod.series(records, "example/axpy/dtype:f64/n:16384")
+    assert [r["run_id"] for r in series] == ["e2e-1", "e2e-2"]
+    assert series[0]["verdict"] == "new"
+    assert series[1]["verdict"] in ("similar", "improvement", "regression")
+
+    # report renders with the compile column and the typed names
+    paths = generate_run_report(str(out))
+    md = open(paths["md"]).read()
+    assert "example/axpy/dtype:bf16" not in md
+    assert "example/axpy/dtype:f32/n:16384" in md
+    assert "| compile |" in md.replace("compile ", "compile ")
+    assert os.path.exists(paths["html"])
+
+
+def test_series_by_param_plots_dtype_as_series(tmp_path):
+    """One spec + group_by plots each dtype as its own series instead
+    of needing a hand-written series per family clone."""
+    from repro.scopeplot.plot import load_spec, render_spec
+    import yaml
+
+    doc = {"context": {}, "benchmarks": [
+        {"name": f"s/mm/dtype:{d}/n:{n}", "run_name": f"s/mm/dtype:{d}/n:{n}",
+         "run_type": "iteration", "iterations": 1, "real_time": t,
+         "cpu_time": t, "time_unit": "us", "repetitions": 1,
+         "repetition_index": 0, "threads": 1}
+        for d, n, t in [("f32", 256, 1.0), ("f32", 512, 2.0),
+                        ("bf16", 256, 0.5), ("bf16", 512, 1.0)]]}
+    src = tmp_path / "r.json"
+    src.write_text(json.dumps(doc))
+    spec_path = tmp_path / "spec.yaml"
+    spec_path.write_text(yaml.safe_dump({
+        "title": "mm by dtype", "type": "line",
+        "output": "mm.png",
+        "series": [{"input_file": "r.json", "regex": "s/mm",
+                    "group_by": "dtype", "xfield": "n"}],
+    }))
+    spec = load_spec(str(spec_path))
+    out = render_spec(spec, base_dir=str(tmp_path))
+    assert os.path.exists(out)
+
+    # filter_params + param_values back the expansion
+    from repro.scopeplot.model import loads
+    bf = loads(json.dumps(doc))
+    assert bf.param_values("dtype") == ["f32", "bf16"]
+    assert [r.name for r in bf.filter_params({"dtype": "bf16"})] == \
+        ["s/mm/dtype:bf16/n:256", "s/mm/dtype:bf16/n:512"]
+
+    # aggregate records (display name suffixed "_stddev") parse their
+    # params from run_name — no phantom "256_stddev" axis value, and
+    # filtering keeps the instance's aggregates (error bars survive)
+    agg = loads(json.dumps({"context": {}, "benchmarks": [
+        {"name": "s/mm/dtype:f32/n:256_stddev",
+         "run_name": "s/mm/dtype:f32/n:256", "run_type": "aggregate",
+         "aggregate_name": "stddev", "iterations": 1, "real_time": 0.1,
+         "cpu_time": 0.1, "time_unit": "us", "repetitions": 2,
+         "repetition_index": 0, "threads": 1}]}))
+    assert agg.records[0].params == {"dtype": "f32", "n": "256"}
+    assert agg.param_values("n") == ["256"]
+    assert len(agg.filter_params({"n": "256"})) == 1
+
+    # group_by is rejected where it can't work
+    from repro.scopeplot.plot import SpecError
+    bad = tmp_path / "bad.yaml"
+    bad.write_text(yaml.safe_dump({
+        "type": "timeseries", "output": "x.png",
+        "series": [{"input_file": "h.jsonl", "group_by": "dtype"}]}))
+    with pytest.raises(SpecError, match="group_by"):
+        load_spec(str(bad))
+
+
+def test_run_cli_param_selection_subprocess(tmp_path):
+    """`python -m repro run --param dtype=f32 --jobs 2`: the manifest
+    holds only matching instances (the CI smoke assertion, in-tree)."""
+    # inherit the environment (JAX_PLATFORMS etc.) — a bare env makes
+    # the worker's jax backend probe crawl on exotic containers
+    env = dict(os.environ, PYTHONPATH=os.path.abspath("src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro", "run",
+         "--enable-scope", "example", "--param", "dtype=f32",
+         "--jobs", "2", "--shard-grain", "benchmark",
+         "--results-dir", str(tmp_path), "--run-id", "psmoke",
+         "--benchmark_min_time", "0.001",
+         "--benchmark_out", os.devnull],
+        capture_output=True, text=True, env=env, cwd=".")
+    assert r.returncode == 0, r.stderr[-2000:]
+    manifest = json.load(open(tmp_path / "psmoke" / "manifest.json"))
+    assert manifest["items"], "param filter selected nothing"
+    assert all(i["params"].get("dtype") == "f32"
+               for i in manifest["items"])
+    assert all(i["status"] == "ok" for i in manifest["items"])
