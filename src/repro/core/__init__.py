@@ -26,6 +26,8 @@ from .errorcheck import (ScopeError, check_compiles, check_finite,
 from .flags import FLAGS, FlagRegistry
 from .hooks import HOOKS, HookChain
 from .logging import get_logger
+from .measure import (CostModelMeter, CpuTimeMeter, DEFAULT_METERS, METERS,
+                      Meter, MeterStack, WallClockMeter, parse_meters)
 from .baseline import Comparison, compare_documents, save_baseline
 from .orchestrate import (InstanceResult, OrchestratorOptions, RunResult,
                           ScopeShard, execute, merge_shards)
@@ -43,6 +45,8 @@ __all__ = [
     "ScopeError", "check_compiles", "check_finite", "check_shape",
     "check_sharding", "checked", "sync",
     "FLAGS", "FlagRegistry", "HOOKS", "HookChain", "get_logger",
+    "Meter", "MeterStack", "WallClockMeter", "CpuTimeMeter",
+    "CostModelMeter", "METERS", "DEFAULT_METERS", "parse_meters",
     "REGISTRY", "BenchmarkRegistry", "benchmark", "register_benchmark",
     "RunOptions", "run_benchmarks", "run_single_instance", "write_json",
     "BUILTIN_SCOPES", "Scope", "ScopeManager",

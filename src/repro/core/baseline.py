@@ -47,22 +47,43 @@ ERRORS = "errors"
 
 @dataclass
 class Stats:
-    """Pooled repetition statistics for one benchmark run_name."""
+    """Pooled repetition statistics for one benchmark run_name.
+
+    Iteration records are the primary source (``times``).  A document
+    reduced by ``--aggregates-only`` carries no iteration records, so
+    its mean/stddev/repetitions aggregates are kept as a fallback —
+    the statistics survive even though the raw repetitions don't.
+    """
 
     times: List[float] = field(default_factory=list)   # seconds
     errors: int = 0
+    agg_mean: Optional[float] = None     # seconds, from the aggregates
+    agg_stddev: Optional[float] = None
+    agg_n: Optional[int] = None
+
+    @property
+    def has_times(self) -> bool:
+        """True when any timing statistic exists (raw or aggregate)."""
+        return bool(self.times) or self.agg_mean is not None
 
     @property
     def n(self) -> int:
-        return len(self.times)
+        if self.times:
+            return len(self.times)
+        return self.agg_n or 0
 
     @property
     def mean(self) -> float:
-        return statistics.fmean(self.times) if self.times else float("nan")
+        if self.times:
+            return statistics.fmean(self.times)
+        return self.agg_mean if self.agg_mean is not None else float("nan")
 
     @property
     def stddev(self) -> float:
-        return statistics.stdev(self.times) if len(self.times) > 1 else 0.0
+        if self.times:
+            return statistics.stdev(self.times) if len(self.times) > 1 \
+                else 0.0
+        return self.agg_stddev or 0.0
 
 
 @dataclass
@@ -77,21 +98,35 @@ class Comparison:
 
 
 def collect_stats(doc: Dict[str, Any]) -> Dict[str, Stats]:
-    """Pool iteration records (not aggregates) by ``run_name``."""
+    """Pool iteration records by ``run_name``.
+
+    Aggregate records are never pooled into ``times`` (that would
+    double-count repetitions) but their mean/stddev are kept as the
+    fallback statistics for names whose iteration records were dropped
+    by ``--aggregates-only``.
+    """
     out: Dict[str, Stats] = {}
     for rec in doc.get("benchmarks", []):
-        if rec.get("run_type") == "aggregate":
-            continue
         name = rec.get("run_name") or rec.get("name", "")
         st = out.setdefault(name, Stats())
+        scale = _TIME_SCALE.get(rec.get("time_unit", "ns"), 1.0)
+        if rec.get("run_type") == "aggregate":
+            t = rec.get("real_time")
+            if t is not None:
+                if rec.get("aggregate_name") == "mean":
+                    st.agg_mean = t * scale
+                elif rec.get("aggregate_name") == "stddev":
+                    st.agg_stddev = t * scale
+            if rec.get("repetitions"):
+                st.agg_n = int(rec["repetitions"])
+            continue
         if rec.get("error_occurred") or rec.get("skipped"):
             st.errors += 1
             continue
         t = rec.get("real_time")
         if t is None:
             continue
-        st.times.append(t * _TIME_SCALE.get(rec.get("time_unit", "ns"),
-                                            1.0))
+        st.times.append(t * scale)
     return out
 
 
@@ -105,17 +140,17 @@ def compare_documents(base: Dict[str, Any], new: Dict[str, Any],
         sa, sb = a.get(name), b.get(name)
         if sa is None:
             out.append(Comparison(name, ADDED,
-                                  new_time=sb.mean if sb.times else None))
+                                  new_time=sb.mean if sb.has_times else None))
             continue
         if sb is None:
             out.append(Comparison(name, REMOVED,
-                                  base_time=sa.mean if sa.times else None))
+                                  base_time=sa.mean if sa.has_times else None))
             continue
-        if not sa.times or not sb.times:
+        if not sa.has_times or not sb.has_times:
             which = []
-            if not sa.times:
+            if not sa.has_times:
                 which.append("baseline")
-            if not sb.times:
+            if not sb.has_times:
                 which.append("contender")
             out.append(Comparison(name, ERRORS,
                                   note=f"errored in {'+'.join(which)}"))

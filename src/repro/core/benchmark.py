@@ -18,8 +18,12 @@ axes**, not tuples of ints.
   * ``State`` — the iteration object handed to a benchmark body.
     Supports the ``while state.keep_running():`` / ``for _ in state:``
     protocols, manual timing pause/resume, counters, bytes/items
-    rates, ``skip_with_error``, and the fixture context
-    (``state.fixture``).
+    rates, ``skip_with_error``, the fixture context
+    (``state.fixture``), and **sync deliverables**
+    (``state.deliver(out)``): the body hands its outputs to the state
+    so the measurement layer (repro.core.measure) can fence async
+    dispatch *before the clock stops* — a body no longer blocks the
+    device every iteration just to be measurable.
   * ``Benchmark`` — a registered family: a body plus either a typed
     ``ParamSpace`` or a legacy int-tuple sweep (``args`` / ``ranges``,
     mirroring GB's ``->Args()``/``->Ranges()``), an optional *fixture*
@@ -286,10 +290,19 @@ class State:
         self.error_message = ""
         self.skipped = False
         self.skip_message = ""
+        # sync deliverables: the batch's outputs, declared by the body
+        # (state.deliver(out)); the measurement layer fences on them
+        self.deliverables: Any = None
+        # fence hook installed by the wall-clock meter: runs before the
+        # stop timestamp is captured, so async dispatch is inside the
+        # timed window (repro.core.measure.WallClockMeter)
+        self._sync: Optional[Callable[["State"], Any]] = None
         # manual timing
         self._timing = False
         self._t_start = 0.0
         self._elapsed = 0.0
+        self._cpu_start = 0.0
+        self._cpu_elapsed = 0.0
         self._paused_elapsed = 0.0
 
     # -- GB arg access ------------------------------------------------
@@ -322,10 +335,17 @@ class State:
     def _start_timer(self) -> None:
         self._timing = True
         self._t_start = time.perf_counter()
+        self._cpu_start = time.process_time()
 
     def _stop_timer(self) -> None:
         if self._timing:
+            # fence BEFORE capturing the stop timestamp: async dispatch
+            # (JAX enqueues work and returns) must complete inside the
+            # timed window, or the clock measures enqueue cost
+            if self._sync is not None:
+                self._sync(self)
             self._elapsed += time.perf_counter() - self._t_start
+            self._cpu_elapsed += time.process_time() - self._cpu_start
             self._timing = False
 
     def pause_timing(self) -> None:
@@ -344,10 +364,27 @@ class State:
         return self._elapsed
 
     @property
+    def cpu_elapsed(self) -> float:
+        """Process CPU seconds over the same window as :attr:`elapsed`."""
+        return self._cpu_elapsed
+
+    @property
     def manual_elapsed(self) -> float:
         return self._paused_elapsed
 
     # -- results ----------------------------------------------------------
+    def deliver(self, value: Any) -> Any:
+        """Declare the batch's output as the sync deliverable.
+
+        Call inside the timed loop with whatever the body computes
+        (``state.deliver(fn(x))``); the default sync fence blocks on the
+        *last* delivered value before the clock stops, so the whole
+        pipelined batch — not just its enqueue — is measured.  Returns
+        ``value`` so it can wrap an expression in place.
+        """
+        self.deliverables = value
+        return value
+
     def set_bytes_processed(self, n: int) -> None:
         self.bytes_processed = n
 
@@ -392,6 +429,11 @@ class Benchmark:
     repetitions: Optional[int] = None
     iterations: Optional[int] = None       # fixed iteration count (no adaptation)
     use_manual_time: bool = False
+    # per-family measurement overrides (repro.core.measure): a sync(ctx)
+    # fence for the wall meter, and a meter-set override (names or
+    # Meter instances) taking precedence over RunOptions.meters
+    sync_fn: Optional[Callable[[Any], Any]] = None
+    meters: Optional[List[Any]] = None
     labels: Dict[str, str] = field(default_factory=dict)
     doc: str = ""
 
@@ -415,6 +457,34 @@ class Benchmark:
         before calibration; the context is handed to the body as
         ``state.fixture``."""
         self.fixture = fn
+        return self
+
+    def set_sync(self, fn: Callable[[Any], Any]) -> "Benchmark":
+        """Per-family device-sync fence, run by the wall-clock meter
+        *before the clock stops* (repro.core.measure).
+
+        ``fn(state)`` receives the batch state (``state.deliverables``,
+        ``state.fixture``, ``state.params``).  Default when unset:
+        ``jax.block_until_ready`` over the delivered outputs (falling
+        back to the fixture context).  Pass a no-op (``lambda ctx:
+        None``) to declare a host-synchronous family that needs no
+        fence.
+        """
+        self.sync_fn = fn
+        return self
+
+    def set_meters(self, *meters: Any) -> "Benchmark":
+        """Per-family meter-set override: names from
+        ``repro.core.measure.METERS`` and/or Meter instances.  Takes
+        precedence over the run-level ``--meters`` selection; the wall
+        and CPU meters are always included (the time sources).  Name
+        typos fail here, at registration — not as per-instance error
+        records at run time."""
+        from .measure import validate_meter_name
+        for m in meters:
+            if isinstance(m, str):
+                validate_meter_name(m)
+        self.meters = list(meters)
         return self
 
     # -- GB-style fluent sweep builders -----------------------------------

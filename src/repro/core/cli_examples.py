@@ -23,6 +23,13 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
          "--benchmark_filter example/saxpy --benchmark_out saxpy.json"),
         ("run only the bf16 points of every typed parameter space",
          "python -m repro run --param dtype=bf16 --jobs 2"),
+        ("device-fenced wall time, real CPU time, and static "
+         "flops/bytes_accessed counters on every record",
+         "python -m repro run --meters wall,cpu,costmodel --jobs 2"),
+        ("repetition statistics only, with throughput and meter "
+         "counters carried onto the aggregate records",
+         "python -m repro run --benchmark_repetitions 5 "
+         "--aggregates-only"),
         ("gate against the windowed run history (exit 1 on regression)",
          "python -m repro run --jobs 2 --baseline results/history.jsonl"),
         ("store this run as the baseline for later gating",

@@ -18,6 +18,10 @@ to ``<results-dir>/history.jsonl``:
   * ``verdict`` is the instance's fate versus its *previous* history
     record (``new`` / ``similar`` / ``improvement`` / ``regression`` /
     ``errored``), so the file is a readable changelog on its own;
+  * ``counters`` (when present) carries the mean of every inlined GB
+    counter on the instance's records — meter metrics (``flops``,
+    ``flops_per_second``, docs/measurement.md) and body counters alike
+    survive into the store (:func:`doc_counters`);
   * ``sysinfo`` is :func:`repro.core.sysinfo.context_digest` of the
     run's context — records from different machines/stacks are never
     compared or pooled: verdicts only look at same-digest predecessors,
@@ -113,6 +117,47 @@ def benchmark_names(records: Iterable[Record]) -> List[str]:
     return out
 
 
+def doc_counters(doc: Dict[str, Any]) -> Dict[str, Dict[str, float]]:
+    """Mean numeric counters per ``run_name`` of a merged document.
+
+    GB inlines counters at the record's top level, so a counter is any
+    numeric field that is not a canonical record key — which is exactly
+    how meter metrics (``flops``, ``flops_per_second``, ...) and body
+    counters reach history.  Iteration records are averaged; a name
+    reduced to aggregates by ``--aggregates-only`` falls back to its
+    ``mean`` aggregate's counters.
+    """
+    from .runner import RESERVED_RECORD_KEYS
+    sums: Dict[str, Dict[str, float]] = {}
+    counts: Dict[str, Dict[str, int]] = {}
+    agg: Dict[str, Dict[str, float]] = {}
+    for rec in doc.get("benchmarks", []):
+        if rec.get("error_occurred") or rec.get("skipped"):
+            continue
+        name = rec.get("run_name") or rec.get("name", "")
+        extras = {k: float(v) for k, v in rec.items()
+                  if k not in RESERVED_RECORD_KEYS
+                  and isinstance(v, (int, float))
+                  and not isinstance(v, bool)}
+        if not extras:
+            continue
+        if rec.get("run_type") == "aggregate":
+            if rec.get("aggregate_name") == "mean":
+                agg[name] = extras
+            continue
+        s = sums.setdefault(name, {})
+        c = counts.setdefault(name, {})
+        for k, v in extras.items():
+            s[k] = s.get(k, 0.0) + v
+            c[k] = c.get(k, 0) + 1
+    out: Dict[str, Dict[str, float]] = {}
+    for name, s in sums.items():
+        out[name] = {k: v / counts[name][k] for k, v in s.items()}
+    for name, extras in agg.items():
+        out.setdefault(name, extras)
+    return out
+
+
 def _verdict(prev: Optional[Record], mean: Optional[float],
              stddev: float, n: int, threshold: float, sigmas: float
              ) -> Tuple[str, Optional[float]]:
@@ -180,10 +225,11 @@ def append_run(results_dir: str, doc: Dict[str, Any],
         if r.get("sysinfo") == digest:
             last[r.get("name", "")] = r
 
+    counters = doc_counters(doc)
     records: List[Record] = []
     for name, st in collect_stats(doc).items():
-        mean = st.mean if st.times else None
-        stddev = st.stddev if st.times else 0.0
+        mean = st.mean if st.has_times else None
+        stddev = st.stddev if st.has_times else 0.0
         verdict, ratio = _verdict(last.get(name), mean, stddev, st.n,
                                   threshold, sigmas)
         rec: Record = {
@@ -193,6 +239,8 @@ def append_run(results_dir: str, doc: Dict[str, Any],
         }
         if ratio is not None:
             rec["ratio"] = round(ratio, 6)
+        if name in counters:
+            rec["counters"] = counters[name]
         records.append(rec)
     if not records:
         return []

@@ -18,8 +18,10 @@ Startup sequence mirrors the paper's run stage:
      (``--jobs N`` parallelizes across failure-isolated workers;
      ``--shard-grain benchmark`` schedules individual benchmark
      instances, ``--resume <run-id>`` completes an interrupted run;
-     see repro.core.orchestrate), write the merged GB-JSON data file
-     and append the run to ``<results-dir>/history.jsonl``
+     ``--meters`` selects the measurement meter stack every worker
+     drives — see repro.core.orchestrate / repro.core.measure), write
+     the merged GB-JSON data file and append the run to
+     ``<results-dir>/history.jsonl``
   7. optionally diff against / store a baseline (repro.core.baseline)
 
 ``--help`` on the binary and on every subcommand carries copy-pasteable
@@ -38,6 +40,7 @@ from .baseline import (compare_documents, compare_main, format_comparisons,
                        summarize)
 from .benchmark import parse_param_filter
 from .cli_examples import epilog
+from .measure import parse_meters
 from .flags import FLAGS
 from .hooks import HOOKS
 from .orchestrate import OrchestratorOptions, execute
@@ -123,6 +126,20 @@ def build_run_parser() -> argparse.ArgumentParser:
                           "equals VALUE (repeatable; same KEY twice ORs "
                           "the values, distinct KEYs AND together — e.g. "
                           "--param dtype=bf16 --param backend=pallas)")
+    sel.add_argument("--meters", default=None, metavar="LIST",
+                     help="comma-separated measurement meters driven "
+                          "around every batch (available: wall, cpu, "
+                          "costmodel; default wall,cpu).  wall and cpu "
+                          "are always included — they are the record's "
+                          "time sources; costmodel adds "
+                          "flops/bytes_accessed counters from the "
+                          "fixture's jitted callable "
+                          "(docs/measurement.md)")
+    sel.add_argument("--aggregates-only", action="store_true",
+                     help="with --benchmark_repetitions > 1, report only "
+                          "the mean/median/stddev aggregate records "
+                          "(throughput, compile time and meter counters "
+                          "are carried onto them)")
     sel.add_argument("--jobs", type=int, default=1,
                      help="run work in N parallel isolated workers")
     sel.add_argument("--isolate", default="auto",
@@ -185,6 +202,14 @@ def run_main(argv: List[str],
         log.error("%s", e)
         return 2
 
+    meters = None
+    if sel_ns.meters:
+        try:
+            meters = parse_meters(sel_ns.meters)
+        except ValueError as e:
+            log.error("%s", e)
+            return 2
+
     if sel_ns.resume and not sel_ns.results_dir:
         log.error("--resume requires --results-dir")
         return 2
@@ -242,7 +267,9 @@ def run_main(argv: List[str],
         run=RunOptions(
             min_time=FLAGS.get("benchmark_min_time", 0.05),
             repetitions=FLAGS.get("benchmark_repetitions", 1),
+            report_aggregates_only=sel_ns.aggregates_only,
             param_filter=param_filter,
+            meters=meters,
         ),
         flag_values={s.name: FLAGS.get(s.name) for s in FLAGS.declared()},
         results_dir=sel_ns.results_dir or None,

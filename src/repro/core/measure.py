@@ -1,0 +1,394 @@
+"""Pluggable measurement meters — the run stage's observation layer.
+
+The paper's core claim is that "developing and defining accurate
+performance measurements is necessary at all levels of the system
+hierarchy" (§I).  The runner used to hardwire one measurement — a bare
+``perf_counter`` around the batch, with ``cpu_time`` emitted as a copy
+of ``real_time`` and no fence over JAX's async dispatch, so a body that
+never blocked measured *enqueue* cost, not compute.  This module turns
+measurement into a provider API the runner drives around every warm,
+calibration and repetition batch:
+
+  * :class:`Meter` — the provider protocol: ``begin(state)`` before the
+    batch body runs, ``end(state) -> {metric: value}`` after.  Two
+    metric keys are reserved and consumed by the runner for the
+    canonical GB record fields (:data:`WALL_TIME`, :data:`CPU_TIME`);
+    everything else a meter returns flows into the record as inlined
+    GB counters, so ScopePlot/report pick new metrics up with zero
+    schema work;
+  * :class:`MeterStack` — an ordered set of meters built once per
+    benchmark instance (``MeterStack.build``), begun in order and ended
+    in reverse order around each batch, with derived roofline counters
+    (``flops_per_second``) computed where the primitives allow;
+  * :class:`WallClockMeter` — the primary clock.  Installs a per-family
+    ``sync(ctx)`` fence into the state's timer-stop path so async
+    dispatch is *fenced before the clock stops*: the default fence is
+    ``jax.block_until_ready`` over the batch's declared deliverables
+    (``state.deliver(out)``), falling back to the fixture context.
+    Families override it with ``bench.set_sync(fn)`` (a no-op fence
+    opts a host-synchronous family out);
+  * :class:`CpuTimeMeter` — ``time.process_time`` over the same timed
+    window the wall clock measures, making ``cpu_time`` a real
+    measurement; the wall/CPU gap is the dispatch/device-wait signal;
+  * :class:`CostModelMeter` — static cost-model counters (``flops``,
+    ``bytes_accessed``, ``arithmetic_intensity``) derived once per
+    instance from the fixture's jitted callable: optimized-HLO analysis
+    through :mod:`repro.roofline.hlo` (loop-trip-aware, exact for
+    ``dot``), with ``Lowered.cost_analysis()`` as the fallback for
+    quantities the analyzer cannot see (elementwise FLOPs).  Combined
+    with the wall clock it emits achieved ``flops_per_second`` on every
+    record for free.
+
+Meter sets are selected per run (``--meters wall,cpu,costmodel`` →
+``RunOptions.meters``) or per family (``bench.set_meters(...)``); the
+wall and CPU meters are always present — they are the time sources the
+records are built from, so a selection like ``--meters costmodel``
+adds to the core set rather than silently reverting ``cpu_time`` to a
+copy of ``real_time``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .logging import get_logger
+
+log = get_logger("measure")
+
+#: Reserved metric keys consumed by the runner for canonical GB record
+#: fields (seconds per *batch*); everything else becomes a counter.
+WALL_TIME = "real_time_s"
+CPU_TIME = "cpu_time_s"
+
+#: The meter set a run uses when neither the family nor the run options
+#: select one.  ``cpu`` is on by default: ``cpu_time`` has been a silent
+#: copy of ``real_time`` for long enough.
+DEFAULT_METERS = ("wall", "cpu")
+
+
+#: Families already warned about a weak (inputs-only) default fence.
+_WEAK_FENCE_WARNED: set = set()
+
+
+def default_sync(state, family: str = "") -> None:
+    """Fence async dispatch before the clock stops.
+
+    Blocks on the batch's declared deliverables (``state.deliver(out)``
+    inside the timed loop), falling back to the fixture context.  Only
+    fences when JAX is already loaded in this process — if no code
+    imported jax, nothing async was dispatched, and a numpy-only run
+    must not pay a jax import inside its timed region.
+
+    The fixture fallback is a *weak* fence: blocking on input arrays
+    does not wait for dispatched work that consumes them.  A family
+    whose fixture holds jax arrays but whose body never delivered
+    anything is warned once — its numbers are still enqueue-timed
+    until it declares deliverables (or a ``set_sync`` fence).
+    """
+    target = state.deliverables
+    fallback = target is None
+    if fallback:
+        target = state.fixture
+    if target is None:
+        return
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return
+    if fallback and family not in _WEAK_FENCE_WARNED and any(
+            isinstance(leaf, jax.Array)
+            for leaf in jax.tree_util.tree_leaves(target)):
+        _WEAK_FENCE_WARNED.add(family)
+        log.warning(
+            "benchmark %s: body never declared deliverables "
+            "(state.deliver) — the default fence can only block on the "
+            "fixture's *inputs*, which does not wait for dispatched "
+            "work, so real_time may be enqueue cost; declare "
+            "deliverables or set_sync (docs/measurement.md)", family)
+    jax.block_until_ready(target)
+
+
+def fixture_call(state) -> Optional[Tuple[Callable, tuple]]:
+    """The ``(callable, args)`` convention of fixture contexts.
+
+    Builtin fixtures return ``(jitted_fn, *operands)``; meters that need
+    the traced computation (cost model) recover it from that shape.
+    ``None`` when the fixture doesn't follow the convention.
+    """
+    ctx = state.fixture
+    if isinstance(ctx, tuple) and ctx and callable(ctx[0]):
+        return ctx[0], tuple(ctx[1:])
+    return None
+
+
+class Meter:
+    """Measurement provider protocol.
+
+    ``begin(state)`` runs immediately before the batch body,
+    ``end(state)`` immediately after; ``end`` returns ``{metric:
+    value}``.  ``bind(bench)`` is called once when the stack is built so
+    a meter can read per-family configuration (sync hook, manual-time
+    mode).  Meters must not mutate the measurement itself — the wall
+    meter owns the clock.
+    """
+
+    name = "meter"
+
+    def bind(self, bench) -> None:  # pragma: no cover - default no-op
+        pass
+
+    def prepare(self, state) -> None:  # pragma: no cover - default no-op
+        """Once per instance, before the warm batch — expensive one-time
+        analysis belongs here so it cannot pollute ``compile_time_s``."""
+
+    def begin(self, state) -> None:  # pragma: no cover - default no-op
+        pass
+
+    def end(self, state) -> Dict[str, float]:
+        return {}
+
+
+class WallClockMeter(Meter):
+    """The primary clock: the state's timed window, device-fenced.
+
+    The state's timer stops inside ``keep_running`` (before the body
+    returns), so the fence cannot run after the batch — instead the
+    meter installs the family's ``sync(ctx)`` hook into the state and
+    the state runs it *before capturing the stop timestamp*.  Manual
+    -time families report their accumulated ``set_iteration_time``
+    instead, unfenced (the body already owns its timing).
+    """
+
+    name = "wall"
+
+    def __init__(self, sync: Optional[Callable] = None):
+        self._ctor_sync = sync           # explicit ctor fence always wins
+        self._sync: Optional[Callable] = sync
+        self._manual = False
+
+    def bind(self, bench) -> None:
+        # re-resolved on every bind: a meter instance shared across
+        # families (set_meters) must pick up each family's own fence
+        self._manual = bench.use_manual_time
+        if self._ctor_sync is not None:
+            self._sync = self._ctor_sync
+        elif bench.sync_fn is not None:
+            self._sync = bench.sync_fn
+        else:
+            family = bench.name
+            self._sync = lambda state: default_sync(state, family)
+
+    def begin(self, state) -> None:
+        # manual-time families own their timing (set_iteration_time):
+        # the auto timer window is unused, so fencing it would only
+        # burn time and mislabel the family as unfenced
+        if not self._manual:
+            state._sync = self._sync or default_sync
+
+    def end(self, state) -> Dict[str, float]:
+        t = state.manual_elapsed if self._manual else state.elapsed
+        return {WALL_TIME: t}
+
+
+class CpuTimeMeter(Meter):
+    """Process CPU seconds over the wall clock's timed window.
+
+    Reads the state's CPU-time window (accumulated alongside the wall
+    window, so ``pause_timing`` excludes the same sections from both).
+    Device/dispatch waits burn wall time but almost no CPU — the gap
+    between the two is the dispatch-overhead signal; CPU above wall
+    means multi-threaded host compute.
+    """
+
+    name = "cpu"
+
+    def end(self, state) -> Dict[str, float]:
+        return {CPU_TIME: state.cpu_elapsed}
+
+
+class CostModelMeter(Meter):
+    """Static cost-model counters from the fixture's jitted callable.
+
+    Lowers the fixture's ``(fn, *args)`` once per parameter point and
+    derives per-call ``flops`` / ``bytes_accessed``:
+
+      * primary: optimized-HLO text through
+        :func:`repro.roofline.hlo.analyze_hlo` — loop-trip-aware and
+        exact for ``dot`` (2·out·contract);
+      * fallback: ``Lowered.cost_analysis()`` for quantities the text
+        analyzer reports as zero (elementwise FLOPs live there).
+
+    A family whose fixture doesn't follow the convention (or whose
+    callable can't lower) contributes nothing — the meter degrades
+    silently rather than failing the instance.  Results are cached per
+    parameter point, so warm/calibration/repetition batches pay the
+    analysis once.
+    """
+
+    name = "costmodel"
+
+    def __init__(self):
+        self._cache: Dict[str, Dict[str, float]] = {}
+        self._family = ""
+
+    def bind(self, bench) -> None:
+        # part of the cache key: a meter instance shared across
+        # families (set_meters) must not hand one family's flops to
+        # another family whose point has the same axis values
+        self._family = bench.name
+
+    def _key(self, state) -> str:
+        return f"{self._family}|{state.params.canonical()}"
+
+    def prepare(self, state) -> None:
+        # analyze before the warm batch is timed: lowering + compiling
+        # for analysis must not inflate the instance's compile_time_s
+        key = self._key(state)
+        if key not in self._cache:
+            self._cache[key] = self._analyze(state)
+
+    def end(self, state) -> Dict[str, float]:
+        key = self._key(state)
+        if key not in self._cache:
+            self._cache[key] = self._analyze(state)
+        return dict(self._cache[key])
+
+    def _analyze(self, state) -> Dict[str, float]:
+        call = fixture_call(state)
+        if call is None:
+            return {}
+        fn, args = call
+        jax = sys.modules.get("jax")
+        if jax is None:
+            return {}
+        try:
+            lowered = fn.lower(*args) if hasattr(fn, "lower") \
+                else jax.jit(fn).lower(*args)
+        except Exception as e:  # noqa: BLE001 - degrade, don't fail the run
+            log.debug("costmodel: %s would not lower: %s", state.params, e)
+            return {}
+        flops = 0.0
+        nbytes = 0.0
+        try:
+            from repro.roofline.hlo import analyze_hlo
+            stats = analyze_hlo(lowered.compile().as_text())
+            flops, nbytes = stats.flops, stats.bytes_accessed
+        except Exception as e:  # noqa: BLE001 - interpret-mode, AOT quirks
+            log.debug("costmodel: HLO analysis failed for %s: %s",
+                      state.params, e)
+        if not flops or not nbytes:
+            try:
+                ca = lowered.cost_analysis()
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0] if ca else {}
+                flops = flops or float(ca.get("flops") or 0.0)
+                nbytes = nbytes or float(ca.get("bytes accessed") or 0.0)
+            except Exception as e:  # noqa: BLE001
+                log.debug("costmodel: cost_analysis failed for %s: %s",
+                          state.params, e)
+        out: Dict[str, float] = {}
+        if flops:
+            out["flops"] = flops
+        if nbytes:
+            out["bytes_accessed"] = nbytes
+        if flops and nbytes:
+            out["arithmetic_intensity"] = flops / nbytes
+        return out
+
+
+#: Built-in meter registry: ``--meters`` names → factories.
+METERS: Dict[str, Callable[[], Meter]] = {
+    "wall": WallClockMeter,
+    "cpu": CpuTimeMeter,
+    "costmodel": CostModelMeter,
+}
+
+
+def validate_meter_name(name: str) -> str:
+    """Raise ``ValueError`` (with the available set) unless ``name`` is
+    a registered meter — the single check behind the CLI flag,
+    ``set_meters`` registration, and stack build."""
+    if name not in METERS:
+        raise ValueError(
+            f"unknown meter {name!r} (available: {', '.join(METERS)})")
+    return name
+
+
+def parse_meters(spec: str) -> List[str]:
+    """``--meters wall,cpu,costmodel`` → validated name list.
+
+    Raises ``ValueError`` on an unknown meter so the CLI can reject the
+    flag before any benchmark runs.
+    """
+    names: List[str] = []
+    for part in spec.split(","):
+        name = part.strip()
+        if not name:
+            continue
+        validate_meter_name(name)
+        if name not in names:
+            names.append(name)
+    if not names:
+        raise ValueError("--meters needs at least one meter name")
+    return names
+
+
+class MeterStack:
+    """An ordered meter set driven around one batch.
+
+    ``begin`` runs meters in order, ``end`` in reverse order (the wall
+    meter is always first, so its clock brackets the others' reads as
+    tightly as possible).  ``end`` merges every meter's metrics and adds
+    derived roofline counters: with both a cost model and a wall time
+    present, achieved ``flops_per_second`` comes for free.
+    """
+
+    def __init__(self, meters: Sequence[Meter]):
+        self.meters = list(meters)
+
+    @classmethod
+    def build(cls, spec: Optional[Sequence[Any]], bench) -> "MeterStack":
+        """Resolve a meter spec (names, instances, factories) for one
+        family.  The wall and CPU meters are mandatory and prepended
+        when the spec omits them: the wall meter is the run's time
+        source, and a missing CPU meter would silently revert
+        ``cpu_time`` to a copy of ``real_time`` — the exact defect the
+        meter layer exists to fix.  ``--meters``/``set_meters`` select
+        the *opt-in* meters on top of that core.
+        """
+        meters: List[Meter] = []
+        for item in (spec or DEFAULT_METERS):
+            if isinstance(item, str):
+                meters.append(METERS[validate_meter_name(item)]())
+            elif isinstance(item, Meter):
+                meters.append(item)
+            elif callable(item):
+                meters.append(item())
+            else:
+                raise TypeError(f"not a meter: {item!r}")
+        if not any(isinstance(m, CpuTimeMeter) for m in meters):
+            meters.insert(0, CpuTimeMeter())
+        if not any(isinstance(m, WallClockMeter) for m in meters):
+            meters.insert(0, WallClockMeter())
+        for m in meters:
+            m.bind(bench)
+        return cls(meters)
+
+    def prepare(self, state) -> None:
+        for m in self.meters:
+            m.prepare(state)
+
+    def begin(self, state) -> None:
+        for m in self.meters:
+            m.begin(state)
+
+    def end(self, state) -> Dict[str, float]:
+        metrics: Dict[str, float] = {}
+        for m in reversed(self.meters):
+            metrics.update(m.end(state))
+        wall = metrics.get(WALL_TIME)
+        flops = metrics.get("flops")
+        if wall and flops:
+            metrics["flops_per_second"] = \
+                flops * max(state.iterations, 1) / wall
+        return metrics

@@ -22,6 +22,12 @@ Shared machinery at both grains:
   * **parallelism** — work runs in fresh interpreters (``--jobs N``), each
     with its own registry/flags, so parallel work cannot contend on the
     global registry or JAX state;
+  * **measurement** — the full :class:`~repro.core.runner.RunOptions`
+    (including the ``--meters`` meter-stack selection,
+    :mod:`repro.core.measure`) travels to every worker as JSON at both
+    grains, so a subprocess worker measures exactly what an inline run
+    would: device-fenced wall time, real CPU time, and any opt-in
+    cost-model counters land in its shard records unchanged;
   * **failure isolation** — a unit that *errors* produces an error shard;
     a unit that *kills its interpreter* (segfault, ``os._exit``) is
     retried in a standalone subprocess (scope grain) or narrowed down to

@@ -230,4 +230,4 @@ def load_cost_hints(path: str) -> Dict[str, float]:
             return out
     from .baseline import collect_stats, load_document
     stats = collect_stats(load_document(path))
-    return {name: st.mean for name, st in stats.items() if st.times}
+    return {name: st.mean for name, st in stats.items() if st.has_times}

@@ -5,6 +5,13 @@ Reimplements the run stage of the SCOPE binary (paper Fig. 2(d)):
   * fixture phase — a family's ``setup(params) -> ctx`` runs once per
     instance, *untimed*, before anything is measured, so array
     allocation and ``jax.jit`` construction never pollute the numbers;
+  * measurement — a pluggable :class:`~repro.core.measure.MeterStack`
+    is driven around every warm, calibration and repetition batch
+    (``begin(state)`` / ``end(state) -> {metric: value}``): the wall
+    meter fences async dispatch before the clock stops, the CPU meter
+    makes ``cpu_time`` a real ``process_time`` measurement instead of a
+    copy of ``real_time``, and opt-in meters (``--meters costmodel``)
+    contribute extra metrics that land as GB counters on every record;
   * warm phase — the first call of the body is measured separately and
     emitted as ``compile_time_s`` per instance: on a jax/pallas system
     the first warm call is where tracing + XLA compilation happen, and
@@ -37,6 +44,7 @@ from typing import Any, Dict, List, Optional, Sequence, TextIO, Tuple
 
 from .benchmark import (Benchmark, Params, State, TIME_UNITS, match_params)
 from .logging import get_logger
+from .measure import CPU_TIME, MeterStack, WALL_TIME
 from .sysinfo import build_context
 
 log = get_logger("runner")
@@ -60,6 +68,11 @@ class RunOptions:
     report_aggregates_only: bool = False
     # --param key=value selection: axis name → accepted string values
     param_filter: Optional[Dict[str, List[str]]] = None
+    # --meters selection: measure.METERS names driven around every batch
+    # (None → measure.DEFAULT_METERS); a family's set_meters() wins.
+    # Plain strings so the options survive the JSON round-trip to
+    # subprocess workers at both shard grains.
+    meters: Optional[List[str]] = None
 
 
 @dataclass
@@ -136,26 +149,29 @@ def _as_params(bench: Benchmark, point) -> Params:
 
 
 def _run_batch(bench: Benchmark, params: Params, n: int,
-               fixture: Any = None) -> State:
+               fixture: Any, stack: MeterStack
+               ) -> Tuple[State, Dict[str, float]]:
+    """One measured batch: the meter stack brackets the body."""
     state = State(max_iterations=n, params=params, fixture=fixture)
+    stack.begin(state)
     bench.fn(state)
-    return state
-
-
-def _time_of(state: State, bench: Benchmark) -> float:
-    return state.manual_elapsed if bench.use_manual_time else state.elapsed
+    return state, stack.end(state)
 
 
 def run_instance(bench: Benchmark, point, opts: RunOptions
                  ) -> List[RunRecord]:
     """Run one (family × params) instance: fixture, warm, calibrate,
-    repeat, aggregate."""
+    repeat, aggregate.  Every batch is measured through the instance's
+    :class:`~repro.core.measure.MeterStack` (family ``set_meters``
+    override, else ``opts.meters``, else the default wall+cpu set)."""
     params = _as_params(bench, point)
     name = bench.instance_name(params if bench.space is not None
                                else tuple(params.values()))
     min_time = bench.min_time if bench.min_time is not None else opts.min_time
     reps = bench.repetitions if bench.repetitions is not None else opts.repetitions
     unit_scale = TIME_UNITS[bench.unit]
+    stack = MeterStack.build(bench.meters if bench.meters is not None
+                             else opts.meters, bench)
 
     # -- fixture: setup(params) -> ctx, untimed --------------------------
     fixture = None
@@ -167,25 +183,31 @@ def run_instance(bench: Benchmark, point, opts: RunOptions
             st.skip_with_error(f"fixture failed: {e!r}")
             return [_error_record(bench, name, st, reps)]
 
+    # -- meter prepare: one-time analysis, before anything is timed ----
+    stack.prepare(State(params=params, fixture=fixture))
+
     # -- warm phase: first call measured separately ----------------------
     # On jax the first call traces + compiles; its wall time is the
     # compile_time_s record.  The warm batch never feeds calibration.
+    # Whole-batch wall (not the meter's loop window) so trace work
+    # outside the timed loop still counts, with the meter's fence
+    # guaranteeing the compiled work finished before the clock stops.
     t0 = time.perf_counter()
-    warm = _run_batch(bench, params, 1, fixture)
+    warm, _ = _run_batch(bench, params, 1, fixture, stack)
     compile_s = time.perf_counter() - t0
     if warm.error_occurred or warm.skipped:
         return [_error_record(bench, name, warm, reps)]
 
-    # -- calibration: grow n until elapsed >= min_time -----------------
+    # -- calibration: grow n until measured time >= min_time -----------
     if bench.iterations is not None:
         n = bench.iterations
     else:
         n = 1
         while True:
-            cal = _run_batch(bench, params, n, fixture)
+            cal, cal_metrics = _run_batch(bench, params, n, fixture, stack)
             if cal.error_occurred or cal.skipped:
                 return [_error_record(bench, name, cal, reps)]
-            t = _time_of(cal, bench)
+            t = cal_metrics.get(WALL_TIME, 0.0)
             if t >= min_time or n >= opts.max_iterations:
                 break
             if t <= 0:
@@ -198,46 +220,91 @@ def run_instance(bench: Benchmark, point, opts: RunOptions
     # -- timed repetitions ------------------------------------------------
     records: List[RunRecord] = []
     per_iter_times: List[float] = []
+    rep_values: Dict[str, List[float]] = {}   # per-rep series → aggregates
+
+    def _track(key: str, value: Optional[float]) -> None:
+        if value is not None:
+            rep_values.setdefault(key, []).append(value)
+
     for rep in range(reps):
-        st = _run_batch(bench, params, n, fixture)
+        st, metrics = _run_batch(bench, params, n, fixture, stack)
         if st.error_occurred or st.skipped:
             records.append(_error_record(bench, name, st, reps, rep))
             continue
-        total = _time_of(st, bench)
-        per_iter = total / max(st.iterations, 1)
+        total = metrics.get(WALL_TIME, 0.0)
+        iters = max(st.iterations, 1)
+        per_iter = total / iters
         per_iter_times.append(per_iter)
+        # cpu_time: a real measurement when the CPU meter ran; bodies
+        # without one fall back to wall (the pre-meter behaviour)
+        cpu_per_iter = metrics[CPU_TIME] / iters if CPU_TIME in metrics \
+            else per_iter
+        _track("cpu_time", cpu_per_iter)
+        # meter metrics beyond the canonical times land as counters;
+        # the body's own counters win on a name collision
+        counters = {k: v for k, v in metrics.items()
+                    if k not in (WALL_TIME, CPU_TIME)}
+        counters.update(st.counters)
+        for key, value in counters.items():
+            _track(key, value)
         rec = RunRecord(
             name=name, run_name=name, run_type="iteration",
             iterations=st.iterations,
             real_time=per_iter * unit_scale,
-            cpu_time=per_iter * unit_scale,
+            cpu_time=cpu_per_iter * unit_scale,
             time_unit=bench.unit,
             repetitions=reps, repetition_index=rep,
             label=st.label or None,
             compile_time_s=compile_s,
-            counters=dict(st.counters),
+            counters=counters,
         )
         if st.bytes_processed:
             rec.bytes_per_second = st.bytes_processed * st.iterations / total
+            _track("bytes_per_second", rec.bytes_per_second)
         if st.items_processed:
             rec.items_per_second = st.items_processed * st.iterations / total
+            _track("items_per_second", rec.items_per_second)
         records.append(rec)
 
     # -- aggregates ---------------------------------------------------
+    # Each aggregate applies its statistic uniformly: to the times, to
+    # cpu_time, to the throughput rates, and to every counter present
+    # in all repetitions — so --report-aggregates-only keeps the full
+    # measurement surface, not just the wall clock.
     if reps > 1 and len(per_iter_times) > 1:
         aggs = {
-            "mean": statistics.fmean(per_iter_times),
-            "median": statistics.median(per_iter_times),
-            "stddev": statistics.stdev(per_iter_times),
+            "mean": statistics.fmean,
+            "median": statistics.median,
+            "stddev": statistics.stdev,
         }
-        for agg_name, val in aggs.items():
-            records.append(RunRecord(
+        full_series = {k: v for k, v in rep_values.items()
+                       if len(v) == len(per_iter_times)}
+        for agg_name, agg_fn in aggs.items():
+            cpu_series = full_series.get("cpu_time")
+            rec = RunRecord(
                 name=f"{name}_{agg_name}", run_name=name,
                 run_type="aggregate", aggregate_name=agg_name,
                 iterations=n,
-                real_time=val * unit_scale, cpu_time=val * unit_scale,
-                time_unit=bench.unit, repetitions=reps,
-            ))
+                real_time=agg_fn(per_iter_times) * unit_scale,
+                cpu_time=(agg_fn(cpu_series) if cpu_series
+                          else agg_fn(per_iter_times)) * unit_scale,
+                # the count the statistics are over: errored repetitions
+                # contribute no sample, and consumers reconstructing n
+                # from an aggregates-only document must not over-trust
+                # a stddev backed by fewer samples than requested
+                time_unit=bench.unit, repetitions=len(per_iter_times),
+                compile_time_s=compile_s if agg_name != "stddev" else None,
+                counters={k: agg_fn(v) for k, v in full_series.items()
+                          if k not in ("cpu_time", "bytes_per_second",
+                                       "items_per_second")},
+            )
+            bps = full_series.get("bytes_per_second")
+            ips = full_series.get("items_per_second")
+            if bps:
+                rec.bytes_per_second = agg_fn(bps)
+            if ips:
+                rec.items_per_second = agg_fn(ips)
+            records.append(rec)
         if opts.report_aggregates_only:
             records = [r for r in records if r.run_type == "aggregate"]
     return records

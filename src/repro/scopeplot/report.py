@@ -282,25 +282,62 @@ def _compile_times(doc: Dict[str, Any]) -> Dict[str, float]:
     return out
 
 
+def _fmt_flops_rate(v: float) -> str:
+    for scale, prefix in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if v >= scale:
+            return f"{v / scale:.2f} {prefix}FLOP/s"
+    return f"{v:.0f} FLOP/s"
+
+
+def _roofline_cells(doc: Dict[str, Any]) -> Dict[str, str]:
+    """run_name → formatted cost-model cell, for runs measured with the
+    cost-model meter (``--meters costmodel``, docs/measurement.md).
+
+    Empty when no record carries cost counters — the verdict table then
+    keeps its historical column set, so reports from default runs stay
+    byte-identical.
+    """
+    counters = hist.doc_counters(doc)
+    out: Dict[str, str] = {}
+    for name, c in counters.items():
+        fps, ai = c.get("flops_per_second"), c.get("arithmetic_intensity")
+        if fps:
+            cell = _fmt_flops_rate(fps)
+            if ai:
+                cell += f" @ {ai:.2f} F/B"
+            out[name] = cell
+        elif ai:
+            out[name] = f"{ai:.2f} F/B"
+    return out
+
+
 def _verdict_rows(doc: Dict[str, Any],
-                  run_records: List[Dict[str, Any]]
+                  run_records: List[Dict[str, Any]],
+                  roofline: Optional[Dict[str, str]] = None
                   ) -> List[List[str]]:
-    """benchmark | mean | stddev | n | compile | vs previous | ratio."""
+    """benchmark | mean | stddev | n | compile | [roofline] | vs previous
+    | ratio — the roofline column appears only when cost-model metrics
+    are present (pass the non-empty ``_roofline_cells`` result)."""
     by_name = {r["name"]: r for r in run_records}
     compile_by_name = _compile_times(doc)
     rows: List[List[str]] = []
     for name, st in collect_stats(doc).items():
         rec = by_name.get(name, {})
-        mean = st.mean if st.times else None
+        mean = st.mean if st.has_times else None
         ratio = rec.get("ratio")
-        rows.append([
+        row = [
             name, _fmt_mean(mean),
             _fmt_time(st.stddev) if st.n > 1 else "-",
             str(st.n),
             _fmt_mean(compile_by_name.get(name)),
+        ]
+        if roofline:
+            row.append(roofline.get(name, "-"))
+        row += [
             rec.get("verdict", "-"),
             f"{ratio:.2f}x" if ratio is not None else "-",
-        ])
+        ]
+        rows.append(row)
     return rows
 
 
@@ -418,9 +455,13 @@ def generate_run_report(run_dir: str, history_file: Optional[str] = None,
     else:
         verdicts.text("No history records for this run — verdicts appear "
                       "once the run is recorded in history.jsonl.")
-    verdicts.table(["benchmark", "mean", "stddev", "n", "compile",
-                    "vs previous", "ratio"],
-                   _verdict_rows(bf.to_dict(), run_records))
+    roofline = _roofline_cells(bf.to_dict())
+    headers = ["benchmark", "mean", "stddev", "n", "compile"]
+    if roofline:
+        headers.append("roofline")
+    headers += ["vs previous", "ratio"]
+    verdicts.table(headers,
+                   _verdict_rows(bf.to_dict(), run_records, roofline))
     sections.append(verdicts)
     sections.append(_drift_section(scoped_records, window))
 

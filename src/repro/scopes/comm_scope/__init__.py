@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ParamSpace, Scope, State, benchmark, sync
+from repro.core import ParamSpace, Scope, State, benchmark
 from repro.core.compat import shard_map
 from repro.core.registry import BenchmarkRegistry
 from repro.core.sysinfo import TPU_V5E
@@ -41,9 +41,9 @@ def modeled_collective_seconds(kind: str, nbytes: int, axis_size: int,
 
 
 def _register(registry: BenchmarkRegistry) -> None:
-    def run_psum(state: State, nbytes: int):
+    def psum_setup(params):
         n = jax.device_count()
-        elems = nbytes // 4
+        elems = params.bytes // 4
         mesh = jax.make_mesh((n,), ("x",))
         x = jnp.ones((n, elems), jnp.float32)
 
@@ -52,18 +52,21 @@ def _register(registry: BenchmarkRegistry) -> None:
             return shard_map(lambda v: jax.lax.psum(v, "x"), mesh=mesh,
                              in_specs=jax.sharding.PartitionSpec("x"),
                              out_specs=jax.sharding.PartitionSpec())(x)
-        sync(f(x))
-        while state.keep_running():
-            sync(f(x))
-        state.set_bytes_processed(nbytes)
-        state.counters["devices"] = n
+        return f, x
 
     @benchmark(scope=NAME, registry=registry)
     def all_reduce_measured(state: State):
-        """psum over the local device mesh (1 device → copy baseline)."""
-        run_psum(state, state.range(0))
+        """psum over the local device mesh (1 device → copy baseline);
+        mesh + jit construction live in the fixture, the reduced array
+        is the sync deliverable."""
+        f, x = state.fixture
+        while state.keep_running():
+            state.deliver(f(x))
+        state.set_bytes_processed(state.params.bytes)
+        state.counters["devices"] = jax.device_count()
     all_reduce_measured.range_multiplier_args(1 << 16, 1 << 22, mult=8)
     all_reduce_measured.set_arg_names(["bytes"])
+    all_reduce_measured.set_fixture(psum_setup)
 
     @benchmark(scope=NAME, registry=registry)
     def collective_modeled_v5e(state: State):

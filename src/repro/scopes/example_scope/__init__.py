@@ -15,7 +15,12 @@ Demonstrates every required or suggested structure for a new scope:
   6. a typed parameter space with a fixture (``axpy``): a ``dtype``
      axis instead of per-dtype family clones, with array allocation in
      ``setup(params)`` so it never pollutes the timed region —
-     *recommended for new benchmarks*.
+     *recommended for new benchmarks*;
+  7. sync deliverables (``state.deliver(out)``): the body declares its
+     output so the measurement layer can fence async dispatch before
+     the clock stops (docs/measurement.md) — on a host-numpy scope the
+     fence is a no-op, but declaring the deliverable keeps the body
+     correct under any backend — *recommended for new benchmarks*.
 """
 from repro.core import FLAGS, ParamSpace, Scope, State, benchmark
 from repro.core.flags import FlagRegistry
@@ -73,10 +78,11 @@ def _register(registry: BenchmarkRegistry) -> None:
     @benchmark(scope=NAME, registry=registry)
     def axpy(state: State):
         """Typed-axis a*x+y: ``dtype`` is a named axis (no per-dtype
-        family clones) and the arrays come from the fixture, untimed."""
+        family clones), the arrays come from the fixture (untimed), and
+        the result is the declared sync deliverable."""
         x, y = state.fixture
         while state.keep_running():
-            y = 2.0 * x + y
+            y = state.deliver(2.0 * x + y)
         itemsize = x.dtype.itemsize
         state.set_bytes_processed(3 * itemsize * state.params.n)
         state.set_items_processed(state.params.n)

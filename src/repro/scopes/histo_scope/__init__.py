@@ -8,7 +8,7 @@ per-backend family clones collapsed into a single parameter space.
 import jax
 import jax.numpy as jnp
 
-from repro.core import ParamSpace, Scope, State, benchmark, sync
+from repro.core import ParamSpace, Scope, State, benchmark
 from repro.core.registry import BenchmarkRegistry
 
 NAME = "histo"
@@ -27,10 +27,10 @@ def _register(registry: BenchmarkRegistry) -> None:
     @benchmark(scope=NAME, registry=registry)
     def histogram(state: State):
         """Histogramming through the selected backend (XLA scatter vs
-        Pallas one-hot matmul)."""
+        Pallas one-hot matmul); the counts are the sync deliverable."""
         fn, x = state.fixture
         while state.keep_running():
-            sync(fn(x))
+            state.deliver(fn(x))
         state.set_items_processed(state.params.n)
 
     # pallas (interpret mode on CPU) stays one small point; the XLA path

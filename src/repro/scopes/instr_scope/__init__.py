@@ -3,14 +3,16 @@
 Elementwise transcendentals, reductions, dtype conversions at fixed array
 size: the per-op cost floor that model-level numbers decompose into.
 One ``elementwise`` family sweeps a typed ``op`` axis instead of seven
-generated per-op family clones; the fixture builds the input array and
-the jitted op untimed, so the warm phase isolates trace+compile into
-``compile_time_s``.
+generated per-op family clones; every family builds its operand array
+and jitted op in a fixture (untimed — the warm phase isolates
+trace+compile into ``compile_time_s``) and declares its output as the
+sync deliverable, so the wall meter fences the pipelined batch once
+instead of the body blocking every iteration.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import ParamSpace, Scope, State, benchmark, sync
+from repro.core import ParamSpace, Scope, State, benchmark
 from repro.core.registry import BenchmarkRegistry
 
 NAME = "instr"
@@ -37,34 +39,37 @@ def _register(registry: BenchmarkRegistry) -> None:
         primitive."""
         fn, x = state.fixture
         while state.keep_running():
-            sync(fn(x))
+            state.deliver(fn(x))
         state.set_items_processed(state.params.n)
         state.set_bytes_processed(8 * state.params.n)
     elementwise.param_space(
         ParamSpace.product(op=list(_OPS), n=[1 << 20]))
     elementwise.set_fixture(elementwise_setup)
 
+    def reduce_sum_setup(params):
+        return jax.jit(jnp.sum), jnp.ones((params.n,), jnp.float32)
+
     @benchmark(scope=NAME, registry=registry)
     def reduce_sum(state: State):
-        n = state.range(0)
-        x = jnp.ones((n,), jnp.float32)
-        fn = jax.jit(jnp.sum)
-        sync(fn(x))
+        fn, x = state.fixture
         while state.keep_running():
-            sync(fn(x))
-        state.set_bytes_processed(4 * n)
+            state.deliver(fn(x))
+        state.set_bytes_processed(4 * state.params.n)
     reduce_sum.args([1 << 20]).set_arg_names(["n"])
+    reduce_sum.set_fixture(reduce_sum_setup)
+
+    def convert_setup(params):
+        return (jax.jit(lambda x: x.astype(jnp.bfloat16)),
+                jnp.ones((params.n,), jnp.float32))
 
     @benchmark(scope=NAME, registry=registry)
     def convert_f32_bf16(state: State):
-        n = state.range(0)
-        x = jnp.ones((n,), jnp.float32)
-        fn = jax.jit(lambda x: x.astype(jnp.bfloat16))
-        sync(fn(x))
+        fn, x = state.fixture
         while state.keep_running():
-            sync(fn(x))
-        state.set_bytes_processed(6 * n)
+            state.deliver(fn(x))
+        state.set_bytes_processed(6 * state.params.n)
     convert_f32_bf16.args([1 << 20]).set_arg_names(["n"])
+    convert_f32_bf16.set_fixture(convert_setup)
 
 
 SCOPE = Scope(name=NAME, version="2.0.0",

@@ -2,12 +2,14 @@
 
 ``batched_matmul`` sweeps a typed ``dtype`` axis (f32 vs bf16 einsum)
 alongside the batch/size ints; the factorizations stay legacy int
-sweeps.
+sweeps but share the same measurement shape: operands + jitted op in a
+fixture, the result declared with ``state.deliver`` so the wall meter
+fences the pipelined batch before the clock stops.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import ParamSpace, Scope, State, benchmark, sync
+from repro.core import ParamSpace, Scope, State, benchmark
 from repro.core.registry import BenchmarkRegistry
 
 NAME = "linalg"
@@ -26,33 +28,39 @@ def _register(registry: BenchmarkRegistry) -> None:
         input precision."""
         fn, x = state.fixture
         while state.keep_running():
-            sync(fn(x))
+            state.deliver(fn(x))
         state.set_items_processed(2 * state.params.b * state.params.n ** 3)
     batched_matmul.param_space(
         ParamSpace.product(dtype=["f32", "bf16"], b=[8], n=[128, 256]))
     batched_matmul.set_fixture(batched_matmul_setup)
 
-    @benchmark(scope=NAME, registry=registry)
-    def cholesky(state: State):
-        n = state.range(0)
-        a = jnp.eye(n) * 4.0 + 0.1
-        fn = jax.jit(jnp.linalg.cholesky)
-        sync(fn(a))
-        while state.keep_running():
-            sync(fn(a))
-    cholesky.args([256]).args([512]).set_arg_names(["n"])
+    def cholesky_setup(params):
+        return (jax.jit(jnp.linalg.cholesky),
+                jnp.eye(params.n) * 4.0 + 0.1)
 
     @benchmark(scope=NAME, registry=registry)
-    def triangular_solve(state: State):
-        n = state.range(0)
+    def cholesky(state: State):
+        fn, a = state.fixture
+        while state.keep_running():
+            state.deliver(fn(a))
+    cholesky.args([256]).args([512]).set_arg_names(["n"])
+    cholesky.set_fixture(cholesky_setup)
+
+    def triangular_solve_setup(params):
+        n = params.n
         a = jnp.eye(n) + jnp.tril(jnp.ones((n, n)) * 0.01)
         b = jnp.ones((n, 16))
         fn = jax.jit(lambda a, b: jax.scipy.linalg.solve_triangular(
             a, b, lower=True))
-        sync(fn(a, b))
+        return fn, a, b
+
+    @benchmark(scope=NAME, registry=registry)
+    def triangular_solve(state: State):
+        fn, a, b = state.fixture
         while state.keep_running():
-            sync(fn(a, b))
+            state.deliver(fn(a, b))
     triangular_solve.args([256]).set_arg_names(["n"])
+    triangular_solve.set_fixture(triangular_solve_setup)
 
 
 SCOPE = Scope(name=NAME, version="2.0.0",

@@ -16,7 +16,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core import FLAGS, ParamSpace, Scope, State, benchmark, sync
+from repro.core import FLAGS, ParamSpace, Scope, State, benchmark
 from repro.core.registry import BenchmarkRegistry
 
 NAME = "model"
@@ -48,10 +48,11 @@ def _register(registry: BenchmarkRegistry) -> None:
         """Reduced-config loss step; the ``arch`` axis sweeps the smoke
         set of assigned architectures (one family, not a per-arch
         clone).  Model build + init happen in the fixture, untimed; the
-        warm phase reports trace+compile as ``compile_time_s``."""
+        warm phase reports trace+compile as ``compile_time_s``; the
+        loss value is the sync deliverable the wall meter fences on."""
         fn, weights, batch = state.fixture
         while state.keep_running():
-            sync(fn(weights, batch))
+            state.deliver(fn(weights, batch))
         state.set_items_processed(2 * 64)
     loss_step_reduced.param_space(ParamSpace.product(arch=_SMOKE_ARCHS))
     loss_step_reduced.set_fixture(loss_step_setup)

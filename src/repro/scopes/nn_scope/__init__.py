@@ -3,50 +3,62 @@
 Layer-level bodies straight from the production model code: flash
 attention (XLA custom-VJP formulation), RMSNorm (one typed family,
 ``backend`` axis selecting XLA vs Pallas), MoE dispatch (scatter
-path), and the Mamba2 SSD chunk scan.
+path), and the Mamba2 SSD chunk scan.  Every family builds operands +
+jitted callable in a fixture (untimed; the runner's warm phase reports
+trace+compile as ``compile_time_s``) and declares its output with
+``state.deliver`` — the wall meter fences the pipelined batch once
+before the clock stops instead of the body blocking every iteration.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import ParamSpace, Scope, State, benchmark, sync
+from repro.core import ParamSpace, Scope, State, benchmark
 from repro.core.registry import BenchmarkRegistry
 
 NAME = "nn"
 
 
+def _attn_operands(S):
+    q = jnp.ones((2, S, 4, 64), jnp.float32)
+    k = jnp.ones((2, S, 2, 64), jnp.float32)
+    v = jnp.ones((2, S, 2, 64), jnp.float32)
+    return q, k, v
+
+
 def _register(registry: BenchmarkRegistry) -> None:
     from repro.models import layers as L
+
+    def flash_fwd_setup(params):
+        fn = jax.jit(lambda q, k, v: L.flash_attention_xla(
+            q, k, v, causal=True, chunk_q=128, chunk_k=128))
+        return (fn,) + _attn_operands(params.seq)
 
     @benchmark(scope=NAME, registry=registry)
     def flash_attention_fwd(state: State):
         """Causal flash attention forward (B=2, H=4, D=64) vs seq len."""
-        S = state.range(0)
-        q = jnp.ones((2, S, 4, 64), jnp.float32)
-        k = jnp.ones((2, S, 2, 64), jnp.float32)
-        v = jnp.ones((2, S, 2, 64), jnp.float32)
-        fn = jax.jit(lambda q, k, v: L.flash_attention_xla(
-            q, k, v, causal=True, chunk_q=128, chunk_k=128))
-        sync(fn(q, k, v))
+        fn, q, k, v = state.fixture
         while state.keep_running():
-            sync(fn(q, k, v))
+            state.deliver(fn(q, k, v))
+        S = state.params.seq
         state.counters["attn_flops"] = 4.0 * 2 * 4 * S * S * 64 / 2
     flash_attention_fwd.args([256]).args([512]).args([1024])
     flash_attention_fwd.set_arg_names(["seq"])
+    flash_attention_fwd.set_fixture(flash_fwd_setup)
+
+    def flash_bwd_setup(params):
+        fn = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
+            L.flash_attention_xla(q, k, v, chunk_q=128, chunk_k=128) ** 2),
+            argnums=(0, 1, 2)))
+        return (fn,) + _attn_operands(params.seq)
 
     @benchmark(scope=NAME, registry=registry)
     def flash_attention_bwd(state: State):
         """Flash attention fwd+bwd through the custom VJP."""
-        S = state.range(0)
-        q = jnp.ones((2, S, 4, 64), jnp.float32)
-        k = jnp.ones((2, S, 2, 64), jnp.float32)
-        v = jnp.ones((2, S, 2, 64), jnp.float32)
-        fn = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
-            L.flash_attention_xla(q, k, v, chunk_q=128, chunk_k=128) ** 2),
-            argnums=(0, 1, 2)))
-        sync(fn(q, k, v))
+        fn, q, k, v = state.fixture
         while state.keep_running():
-            sync(fn(q, k, v))
+            state.deliver(fn(q, k, v))
     flash_attention_bwd.args([256]).args([512]).set_arg_names(["seq"])
+    flash_attention_bwd.set_fixture(flash_bwd_setup)
 
     def rmsnorm_setup(params):
         x = jnp.ones((params.rows, params.d), jnp.float32)
@@ -63,33 +75,34 @@ def _register(registry: BenchmarkRegistry) -> None:
         family, not a per-backend clone."""
         fn, x = state.fixture
         while state.keep_running():
-            sync(fn(x))
+            state.deliver(fn(x))
         state.set_bytes_processed(2 * 4 * state.params.rows * state.params.d)
     rmsnorm.param_space(
         ParamSpace.product(backend=["xla"], rows=[4096], d=[1024, 4096])
         + ParamSpace.cases({"backend": "pallas", "rows": 1024, "d": 1024}))
     rmsnorm.set_fixture(rmsnorm_setup)
 
+    def moe_setup(params):
+        E, k, d, ff = 8, 2, 256, 512
+        p = L.init_moe(jax.random.PRNGKey(0), d, E, ff, 0)
+        x = jnp.ones((1, params.tokens, d), jnp.float32)
+        fn = jax.jit(lambda x: L.moe_scatter(p, x, top_k=k,
+                                             capacity_factor=1.25)[0])
+        return fn, x
+
     @benchmark(scope=NAME, registry=registry)
     def moe_dispatch_scatter(state: State):
         """Capacity-based MoE (router+dispatch+experts+combine)."""
-        E, k, d, ff = 8, 2, 256, 512
-        T = state.range(0)
-        p = L.init_moe(jax.random.PRNGKey(0), d, E, ff, 0)
-        x = jnp.ones((1, T, d), jnp.float32)
-        fn = jax.jit(lambda x: L.moe_scatter(p, x, top_k=k,
-                                             capacity_factor=1.25)[0])
-        sync(fn(x))
+        fn, x = state.fixture
         while state.keep_running():
-            sync(fn(x))
-        state.set_items_processed(T)
+            state.deliver(fn(x))
+        state.set_items_processed(state.params.tokens)
     moe_dispatch_scatter.args([1024]).args([4096])
     moe_dispatch_scatter.set_arg_names(["tokens"])
+    moe_dispatch_scatter.set_fixture(moe_setup)
 
-    @benchmark(scope=NAME, registry=registry)
-    def ssd_chunked_scan(state: State):
-        """Mamba2 SSD chunked scan (XLA formulation)."""
-        S = state.range(0)
+    def ssd_setup(params):
+        S = params.seq
         b, h, p_, n = 2, 4, 64, 64
         x = jnp.ones((b, S, h, p_), jnp.float32) * 0.1
         dt = jnp.ones((b, S, h), jnp.float32) * 0.1
@@ -98,11 +111,17 @@ def _register(registry: BenchmarkRegistry) -> None:
         Cm = jnp.ones((b, S, 1, n), jnp.float32) * 0.1
         D = jnp.ones((h,), jnp.float32)
         fn = jax.jit(lambda *a: L.ssd_chunked(*a, chunk=128)[0])
-        sync(fn(x, dt, A, Bm, Cm, D))
+        return fn, x, dt, A, Bm, Cm, D
+
+    @benchmark(scope=NAME, registry=registry)
+    def ssd_chunked_scan(state: State):
+        """Mamba2 SSD chunked scan (XLA formulation)."""
+        fn, *operands = state.fixture
         while state.keep_running():
-            sync(fn(x, dt, A, Bm, Cm, D))
-        state.set_items_processed(b * S)
+            state.deliver(fn(*operands))
+        state.set_items_processed(2 * state.params.seq)
     ssd_chunked_scan.args([1024]).args([4096]).set_arg_names(["seq"])
+    ssd_chunked_scan.set_fixture(ssd_setup)
 
 
 SCOPE = Scope(name=NAME, version="2.0.0",

@@ -1,0 +1,544 @@
+"""Measurement meters: the wall-clock fence, the wall/CPU split, the
+cost-model counters, aggregate carrying, and the meter selection flag
+(repro.core.measure / the runner's MeterStack integration)."""
+import json
+import os
+import time
+
+import pytest
+
+from repro.core import ParamSpace
+from repro.core.baseline import collect_stats, compare_documents
+from repro.core.history import append_run, doc_counters, load_history
+from repro.core.measure import (CostModelMeter, CpuTimeMeter, DEFAULT_METERS,
+                                MeterStack, WallClockMeter, parse_meters)
+from repro.core.registry import BenchmarkRegistry, benchmark
+from repro.core.runner import RunOptions, run_benchmarks
+
+ALL_METERS = RunOptions(min_time=0.002,
+                        meters=["wall", "cpu", "costmodel"])
+
+
+def _records(doc, run_type="iteration"):
+    return [r for r in doc["benchmarks"] if r["run_type"] == run_type]
+
+
+def _matmul_family(reg, n=64, chain=1, name="mm", **bench_kwargs):
+    """A jax matmul family following the (fn, *operands) fixture
+    convention; ``chain`` stacks matmuls to scale the work."""
+    import jax
+    import jax.numpy as jnp
+
+    def setup(params):
+        def body(x, y):
+            out = y
+            for _ in range(chain):
+                out = x @ out
+            return out
+        return (jax.jit(body),
+                jnp.ones((params.n, params.n), jnp.float32),
+                jnp.ones((params.n, params.n), jnp.float32))
+
+    @benchmark(name=name, scope="t", registry=reg, **bench_kwargs)
+    def mm(state):
+        fn, x, y = state.fixture
+        while state.keep_running():
+            state.deliver(fn(x, y))
+    mm.param_space(ParamSpace.product(n=[n]))
+    mm.set_fixture(setup)
+    return mm
+
+
+# ---------------------------------------------------------------------------
+# WallClockMeter: the fence runs before the clock stops
+# ---------------------------------------------------------------------------
+
+def test_wall_meter_fence_inside_timed_window():
+    """The sync hook's cost lands inside real_time — proof the fence
+    runs before the stop timestamp is captured."""
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def b(state):
+        while state.keep_running():
+            pass
+    b.set_iterations(1)
+    b.set_sync(lambda ctx: time.sleep(0.05))
+
+    doc = run_benchmarks(reg.all(), RunOptions(), progress=False)
+    rec = _records(doc)[0]
+    assert rec["real_time"] >= 0.05 * 1e6        # us
+
+
+def test_default_sync_blocks_on_deliverables():
+    """An async jax body that only *delivers* its output is fenced by
+    the default sync: the measured time must cover the device work, so
+    it is strictly larger than the same body with the fence disabled
+    (which measures enqueue cost only)."""
+    jax = pytest.importorskip("jax")  # noqa: F841 - body imports it
+    reg = BenchmarkRegistry()
+    # enough chained matmuls that compute time dwarfs dispatch time
+    _matmul_family(reg, n=512, chain=8, name="fenced")
+    unfenced = _matmul_family(reg, n=512, chain=8, name="unfenced")
+    unfenced.set_sync(lambda ctx: None)
+    for fam in reg.all():
+        fam.set_iterations(3)
+
+    try:
+        doc = run_benchmarks(reg.all(), RunOptions(), progress=False)
+    finally:
+        # the unfenced family's dispatched matmuls are still draining in
+        # XLA's thread pool (freeing the outputs does not cancel them);
+        # CPU PJRT executes per-device work in enqueue order, so block
+        # on a freshly *enqueued* computation to drain the queue — their
+        # CPU burn must not pollute the process_time window of whatever
+        # test runs next
+        import jax.numpy as jnp
+        jax.jit(lambda x: x + 1)(jnp.zeros(())).block_until_ready()
+    by_name = {r["name"]: r for r in _records(doc)}
+    fenced_t = by_name["t/fenced/n:512"]["real_time"]
+    unfenced_t = by_name["t/unfenced/n:512"]["real_time"]
+    assert fenced_t > unfenced_t, (fenced_t, unfenced_t)
+
+
+# ---------------------------------------------------------------------------
+# CpuTimeMeter: a real wall/CPU split
+# ---------------------------------------------------------------------------
+
+def test_cpu_time_is_not_a_copy_of_real_time():
+    """A sleeping body burns wall time but almost no CPU: cpu_time must
+    come out well below real_time, in iteration AND aggregate records
+    (it used to be a silent copy in both)."""
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def sleeper(state):
+        while state.keep_running():
+            time.sleep(0.03)
+    sleeper.set_iterations(2)
+
+    doc = run_benchmarks(reg.all(), RunOptions(repetitions=2),
+                         progress=False)
+    # 0.7, not ~0: this sandbox's process_time has 10ms ticks, and a
+    # stray tick against the 60ms sleeping batch must not flake
+    for rec in _records(doc):
+        assert rec["cpu_time"] < rec["real_time"] * 0.7, rec
+    means = [r for r in _records(doc, "aggregate")
+             if r["aggregate_name"] == "mean"]
+    assert means and all(r["cpu_time"] < r["real_time"] * 0.7
+                         for r in means)
+
+
+def test_cpu_time_tracks_busy_work():
+    """A busy body's CPU time is the same order as its wall time —
+    the meter measures the timed window, not some unrelated clock.
+    (Iterations sized so the batch clears coarse process_time ticks.)"""
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def busy(state):
+        while state.keep_running():
+            x = 0
+            for i in range(200000):
+                x += i * i
+    busy.set_iterations(10)
+
+    doc = run_benchmarks(reg.all(), RunOptions(), progress=False)
+    rec = _records(doc)[0]
+    assert rec["cpu_time"] > rec["real_time"] * 0.3, rec
+
+
+def test_pause_timing_excludes_cpu_too():
+    """pause/resume carves the same sections out of both clocks."""
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def paused(state):
+        while state.keep_running():
+            state.pause_timing()
+            x = 0
+            for i in range(400000):      # heavy CPU, all excluded
+                x += i * i
+            state.resume_timing()
+    paused.set_iterations(3)
+
+    doc = run_benchmarks(reg.all(), RunOptions(), progress=False)
+    rec = _records(doc)[0]
+    assert rec["cpu_time"] * 1e-6 < 0.05          # us → s
+
+
+# ---------------------------------------------------------------------------
+# CostModelMeter: static flops/bytes from the fixture's callable
+# ---------------------------------------------------------------------------
+
+def test_cost_model_counters_exact_for_matmul():
+    pytest.importorskip("jax")
+    reg = BenchmarkRegistry()
+    _matmul_family(reg, n=64)
+    doc = run_benchmarks(reg.all(), ALL_METERS, progress=False)
+    rec = _records(doc)[0]
+    assert rec["flops"] == 2.0 * 64 ** 3
+    assert rec["bytes_accessed"] > 0
+    assert rec["arithmetic_intensity"] == \
+        rec["flops"] / rec["bytes_accessed"]
+    assert rec["flops_per_second"] > 0
+    # achieved rate is flops per measured second
+    per_iter_s = rec["real_time"] * 1e-6
+    assert rec["flops_per_second"] == pytest.approx(
+        rec["flops"] / per_iter_s, rel=1e-6)
+
+
+def test_cost_model_analysis_runs_once_in_prepare(monkeypatch):
+    """The expensive lowering happens in prepare (untimed, before the
+    warm batch) and is cached per parameter point — batches never pay
+    it again, and compile_time_s can't absorb it."""
+    pytest.importorskip("jax")
+    from repro.core.benchmark import Params, State
+
+    meter = CostModelMeter()
+    calls = []
+    real = meter._analyze
+    monkeypatch.setattr(meter, "_analyze",
+                        lambda st: calls.append(1) or real(st))
+    import jax
+    import jax.numpy as jnp
+    fixture = (jax.jit(jnp.dot), jnp.ones((16, 16)), jnp.ones((16, 16)))
+    st = State(params=Params({"n": 16}), fixture=fixture)
+    meter.prepare(st)
+    assert calls == [1]
+    out = meter.end(st)
+    assert out["flops"] == 2.0 * 16 ** 3
+    assert calls == [1]                       # cached, not re-analyzed
+
+
+def test_cost_model_degrades_without_fixture_convention():
+    """A family whose fixture isn't (fn, *args) gets no cost counters —
+    and no error."""
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def plain(state):
+        while state.keep_running():
+            pass
+    doc = run_benchmarks(reg.all(), ALL_METERS, progress=False)
+    rec = _records(doc)[0]
+    assert "flops" not in rec and not rec.get("error_occurred")
+
+
+def test_body_counters_win_over_meter_metrics():
+    pytest.importorskip("jax")
+    reg = BenchmarkRegistry()
+
+    import jax
+    import jax.numpy as jnp
+
+    def setup(params):
+        return jax.jit(jnp.dot), jnp.ones((8, 8)), jnp.ones((8, 8))
+
+    @benchmark(scope="t", registry=reg)
+    def mm(state):
+        fn, x, y = state.fixture
+        while state.keep_running():
+            state.deliver(fn(x, y))
+        state.counters["flops"] = 123.0       # body's claim wins
+    mm.param_space(ParamSpace.product(n=[8]))
+    mm.set_fixture(setup)
+
+    doc = run_benchmarks(reg.all(), ALL_METERS, progress=False)
+    assert _records(doc)[0]["flops"] == 123.0
+
+
+# ---------------------------------------------------------------------------
+# meter selection
+# ---------------------------------------------------------------------------
+
+def test_parse_meters():
+    assert parse_meters("wall,cpu,costmodel") == ["wall", "cpu",
+                                                  "costmodel"]
+    assert parse_meters("cpu, wall") == ["cpu", "wall"]
+    with pytest.raises(ValueError):
+        parse_meters("wall,tpu_profiler")
+    with pytest.raises(ValueError):
+        parse_meters(",")
+
+
+def test_stack_always_includes_wall_and_cpu():
+    """Selecting an opt-in meter must not drop the time sources: a
+    stack without the CPU meter would silently revert cpu_time to a
+    copy of real_time."""
+    from repro.core.benchmark import Benchmark
+    bench = Benchmark(name="t/x", fn=lambda s: None, scope="t")
+    stack = MeterStack.build(["costmodel"], bench)
+    assert [type(m) for m in stack.meters] == \
+        [WallClockMeter, CpuTimeMeter, CostModelMeter]
+    stack = MeterStack.build(None, bench)
+    assert [type(m) for m in stack.meters] == \
+        [WallClockMeter, CpuTimeMeter]
+    assert list(DEFAULT_METERS) == ["wall", "cpu"]
+    with pytest.raises(ValueError, match="unknown meter"):
+        MeterStack.build(["wall", "costmodl"], bench)
+
+
+def test_set_meters_rejects_unknown_names_at_registration():
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def b(state):
+        while state.keep_running():
+            pass
+    with pytest.raises(ValueError, match="unknown meter"):
+        b.set_meters("costmodl")
+
+
+def test_weak_fence_warns_once_for_undelivering_jax_body():
+    """A jax-fixture body that never delivers gets the inputs-only
+    fallback fence plus a one-time warning that its numbers may be
+    enqueue cost."""
+    import logging as _logging
+
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.core import measure
+
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def undelivering(state):
+        fn, x = state.fixture
+        while state.keep_running():
+            fn(x)                       # neither deliver nor sync
+    undelivering.param_space(ParamSpace.product(n=[64]))
+    undelivering.set_fixture(
+        lambda params: (jax.jit(jnp.exp), jnp.ones((params.n,))))
+    undelivering.set_iterations(2)
+
+    records = []
+
+    class Capture(_logging.Handler):
+        def emit(self, record):
+            records.append(record.getMessage())
+
+    handler = Capture()
+    measure.log.addHandler(handler)
+    try:
+        measure._WEAK_FENCE_WARNED.discard("t/undelivering")
+        run_benchmarks(reg.all(), RunOptions(), progress=False)
+        assert "t/undelivering" in measure._WEAK_FENCE_WARNED
+        hits = [m for m in records if "never declared deliverables" in m]
+        assert len(hits) == 1
+        # warned once per family, not per batch — a second run is quiet
+        run_benchmarks(reg.all(), RunOptions(), progress=False)
+        hits = [m for m in records if "never declared deliverables" in m]
+        assert len(hits) == 1
+    finally:
+        measure.log.removeHandler(handler)
+
+
+def test_shared_cost_meter_keys_cache_by_family():
+    """One CostModelMeter instance shared across families must not
+    hand family A's flops to family B just because both sweep the
+    same axis values."""
+    pytest.importorskip("jax")
+    import jax
+    import jax.numpy as jnp
+    reg = BenchmarkRegistry()
+    shared = CostModelMeter()
+
+    mm = _matmul_family(reg, n=32, name="mm")
+    mm.set_meters(shared)
+
+    def exp_setup(params):
+        return jax.jit(jnp.exp), jnp.ones((params.n,), jnp.float32)
+
+    @benchmark(scope="t", registry=reg)
+    def ew(state):
+        fn, x = state.fixture
+        while state.keep_running():
+            state.deliver(fn(x))
+    ew.param_space(ParamSpace.product(n=[32]))     # same point: n=32
+    ew.set_fixture(exp_setup)
+    ew.set_meters(shared)
+
+    doc = run_benchmarks(reg.all(), RunOptions(min_time=0.002),
+                         progress=False)
+    by_name = {r["name"]: r for r in _records(doc)}
+    assert by_name["t/mm/n:32"]["flops"] == 2.0 * 32 ** 3
+    # exp over 32 floats: whatever the fallback reports, it is NOT the
+    # matmul's flops/bytes smuggled in through a shared cache entry
+    assert by_name["t/ew/n:32"].get("flops") != 2.0 * 32 ** 3
+    assert by_name["t/ew/n:32"].get("bytes_accessed") != \
+        by_name["t/mm/n:32"]["bytes_accessed"]
+
+
+def test_manual_time_families_are_not_fenced():
+    """Manual-time bodies own their timing: the auto timer window is
+    unused, so the fence must not run (nor warn) for them."""
+    reg = BenchmarkRegistry()
+    fenced = []
+
+    @benchmark(scope="t", registry=reg)
+    def manual(state):
+        while state.keep_running():
+            state.set_iteration_time(0.001)
+    manual.manual_time().set_iterations(2)
+    manual.set_sync(lambda ctx: fenced.append(1))
+
+    doc = run_benchmarks(reg.all(), RunOptions(), progress=False)
+    rec = _records(doc)[0]
+    assert rec["real_time"] == pytest.approx(0.001 * 1e6)   # manual, us
+    assert not fenced
+
+
+def test_family_set_meters_overrides_run_selection():
+    """A family can pin its own meter set — here an instance-level
+    CostModelMeter even though the run asked for wall only."""
+    pytest.importorskip("jax")
+    reg = BenchmarkRegistry()
+    fam = _matmul_family(reg, n=32)
+    fam.set_meters("wall", CostModelMeter())
+    doc = run_benchmarks(reg.all(), RunOptions(min_time=0.002,
+                                               meters=["wall"]),
+                         progress=False)
+    assert _records(doc)[0]["flops"] == 2.0 * 32 ** 3
+
+
+# ---------------------------------------------------------------------------
+# aggregates carry the full measurement surface
+# ---------------------------------------------------------------------------
+
+def _throughput_doc(aggregates_only=False):
+    reg = BenchmarkRegistry()
+
+    @benchmark(scope="t", registry=reg)
+    def b(state):
+        while state.keep_running():
+            time.sleep(0.001)
+        state.set_bytes_processed(4096)
+        state.set_items_processed(1024)
+        state.counters["custom"] = 7.0
+    b.set_iterations(2)
+    return run_benchmarks(
+        reg.all(),
+        RunOptions(repetitions=3, report_aggregates_only=aggregates_only),
+        progress=False)
+
+
+def test_aggregates_carry_throughput_compile_and_counters():
+    doc = _throughput_doc()
+    aggs = {r["aggregate_name"]: r for r in _records(doc, "aggregate")}
+    assert set(aggs) == {"mean", "median", "stddev"}
+    for name in ("mean", "median"):
+        rec = aggs[name]
+        assert rec["bytes_per_second"] > 0
+        assert rec["items_per_second"] > 0
+        assert rec["compile_time_s"] > 0
+        assert rec["custom"] == 7.0
+    assert "compile_time_s" not in aggs["stddev"]
+    assert aggs["stddev"]["custom"] == 0.0       # stddev of a constant
+
+
+def test_aggregates_only_documents_stay_comparable():
+    """--aggregates-only output still compares and appends to history:
+    collect_stats falls back to the aggregate statistics."""
+    doc = _throughput_doc(aggregates_only=True)
+    assert all(r["run_type"] == "aggregate" for r in doc["benchmarks"])
+    stats = collect_stats(doc)
+    st = stats["t/b"]
+    assert st.has_times and st.n == 3 and st.mean > 0
+    comps = compare_documents(doc, doc)
+    assert [c.verdict for c in comps] == ["similar"]
+
+
+def test_aggregate_repetitions_count_successful_reps_only():
+    """An errored repetition contributes no sample, so the aggregate's
+    repetitions field (and Stats.n reconstructed from it) must not
+    claim more samples than the statistics are computed over."""
+    reg = BenchmarkRegistry()
+    calls = {"n": 0}
+
+    @benchmark(scope="t", registry=reg)
+    def flaky(state):
+        calls["n"] += 1
+        if calls["n"] == 4:              # warm, cal, rep0 ok; rep1 errors
+            state.skip_with_error("flaked")
+            return
+        while state.keep_running():
+            time.sleep(0.001)
+    flaky.set_iterations(2)
+
+    doc = run_benchmarks(reg.all(), RunOptions(repetitions=3),
+                         progress=False)
+    aggs = [r for r in doc["benchmarks"] if r["run_type"] == "aggregate"]
+    assert aggs and all(r["repetitions"] == 2 for r in aggs)
+    st = collect_stats(doc)["t/flaky"]
+    assert st.n == 2 and st.errors == 1
+
+
+# ---------------------------------------------------------------------------
+# counters → history
+# ---------------------------------------------------------------------------
+
+def test_meter_counters_land_in_history(tmp_path):
+    pytest.importorskip("jax")
+    reg = BenchmarkRegistry()
+    _matmul_family(reg, n=64)
+    doc = run_benchmarks(reg.all(), ALL_METERS, progress=False)
+    counters = doc_counters(doc)
+    assert counters["t/mm/n:64"]["flops"] == 2.0 * 64 ** 3
+
+    recs = append_run(str(tmp_path), doc, run_id="r1")
+    assert recs and recs[0]["counters"]["flops"] == 2.0 * 64 ** 3
+    stored = load_history(os.path.join(str(tmp_path), "history.jsonl"))
+    assert stored[0]["counters"]["bytes_accessed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: plan → shard (subprocess workers) → merge → history
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_meters_survive_subprocess_workers(monkeypatch, tmp_path):
+    """--meters travels through the plan-grain worker JSON: counters
+    measured in a fresh interpreter land in the instance shard, the
+    merged document, and history.jsonl."""
+    from repro.core.flags import FlagRegistry
+    from repro.core.hooks import HookChain
+    from repro.core.orchestrate import OrchestratorOptions, execute
+    from repro.core.scope import ScopeManager
+
+    parts = [os.path.abspath("src")]
+    if os.environ.get("PYTHONPATH"):
+        parts.append(os.environ["PYTHONPATH"])
+    monkeypatch.setenv("PYTHONPATH", os.pathsep.join(parts))
+
+    mgr = ScopeManager(registry=BenchmarkRegistry(), flags=FlagRegistry(),
+                       hooks=HookChain())
+    mgr.load(["repro.scopes.mxu_scope"])
+    mgr.register_all()
+    res = execute(mgr, mgr.registry, OrchestratorOptions(
+        jobs=2, isolate="subprocess", shard_grain="benchmark",
+        run=RunOptions(min_time=0.002,
+                       meters=["wall", "cpu", "costmodel"],
+                       param_filter={"backend": ["xla"], "dtype": ["f32"]}),
+        results_dir=str(tmp_path), run_id="meters-e2e"))
+
+    recs = [r for r in res.doc["benchmarks"]
+            if not r.get("error_occurred")]
+    assert recs, res.doc["benchmarks"]
+    for rec in recs:
+        n = int(rec["name"].rsplit(":", 1)[1])
+        assert rec["flops"] == 2.0 * n ** 3, rec
+        assert rec["bytes_accessed"] > 0
+        assert rec["cpu_time"] != rec["real_time"]
+
+    # the per-instance spool shards carry the counters too
+    shard_dir = tmp_path / "meters-e2e" / "shards"
+    shard_docs = [json.loads(p.read_text())
+                  for p in shard_dir.glob("*.json")]
+    assert shard_docs and all(
+        "flops" in r for d in shard_docs for r in d["benchmarks"])
+
+    hist = load_history(str(tmp_path / "history.jsonl"))
+    by_name = {r["name"]: r for r in hist}
+    for rec in recs:
+        assert by_name[rec["name"]]["counters"]["flops"] == rec["flops"]
