@@ -24,7 +24,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 MANIFEST = "manifest.json"
 

@@ -28,7 +28,7 @@ import os
 import statistics
 import sys
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 from .logging import get_logger
 

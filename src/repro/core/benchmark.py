@@ -44,6 +44,7 @@ raises ``ValueError`` on an unknown unit instead of ``assert`` (which
 """
 from __future__ import annotations
 
+import inspect
 import itertools
 import time
 from collections.abc import Mapping
@@ -407,6 +408,25 @@ BenchmarkFn = Callable[[State], None]
 FixtureFn = Callable[[Params], Any]
 
 
+def _capture_source(fn: Any) -> Tuple[Optional[str], str, int]:
+    """Best-effort ``(source, file, line)`` for a registered callable.
+
+    Captured eagerly at registration so the static-analysis pass
+    (repro.core.lint) still sees the text when the defining module is
+    later unimportable or the function was built dynamically.
+    """
+    try:
+        source = inspect.getsource(fn)
+    except (OSError, TypeError):
+        return None, "", 0
+    try:
+        file = inspect.getsourcefile(fn) or ""
+        line = inspect.getsourcelines(fn)[1]
+    except (OSError, TypeError):
+        file, line = "", 0
+    return source, file, line
+
+
 @dataclass
 class Benchmark:
     """A registered benchmark family (body + parameter space + metadata).
@@ -436,6 +456,13 @@ class Benchmark:
     meters: Optional[List[Any]] = None
     labels: Dict[str, str] = field(default_factory=dict)
     doc: str = ""
+    # source captured at registration time for the static-analysis pass
+    # (repro.core.lint) — None when inspect.getsource cannot see it
+    # (lambdas, REPL definitions); the linter then degrades to SCOPE000.
+    source: Optional[str] = None
+    source_file: str = ""
+    source_line: int = 0
+    fixture_source: Optional[str] = None
 
     # -- typed sweep builders -------------------------------------------
     def param_space(self, space: Optional[ParamSpace] = None,
@@ -457,6 +484,7 @@ class Benchmark:
         before calibration; the context is handed to the body as
         ``state.fixture``."""
         self.fixture = fn
+        self.fixture_source = _capture_source(fn)[0]
         return self
 
     def set_sync(self, fn: Callable[[Any], Any]) -> "Benchmark":

@@ -34,6 +34,9 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
          "python -m repro run --jobs 2 --baseline results/history.jsonl"),
         ("store this run as the baseline for later gating",
          "python -m repro run --save-baseline results/baseline.json"),
+        ("lint pre-flight: abort before anything is timed if a family "
+         "provably mismeasures",
+         "python -m repro run --lint --strict --jobs 2"),
     ],
     "plan": [
         ("print every benchmark instance with its predicted cost and "
@@ -54,6 +57,21 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
         ("compare only the bf16 instances of two runs",
          "python -m repro compare results/baseline.json "
          "results/20260731T120000-42 --param dtype=bf16"),
+    ],
+    "lint": [
+        ("static-analyze every enabled scope (AST + compile + registry "
+         "tiers); exit 1 on error-severity findings",
+         "python -m repro lint"),
+        ("lint one scope, failing on warnings too",
+         "python -m repro lint --scope example --strict"),
+        ("machine-readable findings for CI",
+         "python -m repro lint --format json --strict"),
+        ("fast editor loop: AST/registry tiers only, one family",
+         "python -m repro lint --no-compile --family example/saxpy"),
+        ("run a single rule across every scope",
+         "python -m repro lint --rules SCOPE201"),
+        ("print the rule catalog",
+         "python -m repro lint --list-rules"),
     ],
     "report": [
         ("render report/index.html + report.md for one run",

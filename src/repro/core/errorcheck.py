@@ -9,10 +9,9 @@ should fail a benchmark rather than crash the binary).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

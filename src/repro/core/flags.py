@@ -11,7 +11,7 @@ allowed when unique (matching clara's permissiveness).
 from __future__ import annotations
 
 import argparse
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 

@@ -1,0 +1,143 @@
+"""Compile-tier analysis: lower the fixture's workload, read the HLO.
+
+The ``benchmark::DoNotOptimize`` class of bugs — XLA constant-folding
+or dead-code-eliminating the thing the author believes they are timing
+— is invisible to AST inspection: the source *looks* like it computes.
+This tier detects it instead of working around it: the fixture's
+``(jitted_fn, *operands)`` is lowered and compiled **once** per
+representative instance (the body is never called, nothing is timed)
+and the *optimized* HLO text is diffed against what the author handed
+the compiler:
+
+  * a workload whose optimized module contains **no compute
+    instructions** (only parameters/constants/copies/tuples) was folded
+    away or reduced to a data movement — its timings measure XLA's
+    copy path, not the op;
+  * operand leaves that never become entry parameters were dead-code
+    -eliminated at trace time — the benchmark sweeps an axis the
+    compiled workload does not consume.
+
+Shares the fixture-context convention (``(callable, *operands)``) and
+the HLO text analyzer with the cost-model meter
+(:func:`repro.core.measure.fixture_call`,
+:mod:`repro.roofline.hlo`), so what the linter certifies is exactly
+what the meters will later measure.
+"""
+from __future__ import annotations
+
+import sys
+from dataclasses import dataclass, field
+from types import SimpleNamespace
+from typing import List, Optional
+
+from ..logging import get_logger
+
+log = get_logger("lint")
+
+#: HLO opcodes that move or stage data without computing anything — a
+#: module containing only these does no work worth timing.
+PASSIVE_OPS = frozenset({
+    "parameter", "constant", "get-tuple-element", "tuple", "copy",
+    "copy-start", "copy-done", "bitcast", "after-all", "partition-id",
+    "replica-id",
+})
+
+
+@dataclass
+class CompiledWorkload:
+    """What one family's fixture workload compiled down to."""
+
+    instance: str                    # representative instance name
+    convention: bool = True          # ctx followed (callable, *operands)
+    error: str = ""                  # fixture/lower/compile failure
+    hlo_text: str = ""
+    compute_ops: int = 0             # non-passive instructions, all comps
+    entry_params: int = 0            # entry computation parameters
+    operand_leaves: int = 0          # array leaves handed to the callable
+    flops: float = 0.0               # repro.roofline.hlo estimate
+    passive_only_ops: List[str] = field(default_factory=list)
+
+    def analyzed(self) -> bool:
+        return bool(self.hlo_text) and not self.error
+
+
+def _count_leaves(args) -> int:
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return len(args)
+    return len(jax.tree_util.tree_leaves(args))
+
+
+def compile_workload(bench) -> Optional[CompiledWorkload]:
+    """Lower + compile the fixture's workload for the family's first
+    instance; return its :class:`CompiledWorkload` (None when there is
+    no fixture or no instance to represent the family).
+
+    Only ``fixture(params)``, ``lower`` and ``compile`` run — never the
+    benchmark body, never a timed repetition.  Failures are recorded on
+    the result (``error``) rather than raised: the trace tier degrades
+    per family exactly like the cost-model meter does.
+    """
+    if bench.fixture is None:
+        return None
+    instances = bench.instances()
+    if not instances:
+        return None
+    name, params = instances[0]
+    out = CompiledWorkload(instance=name)
+    try:
+        ctx = bench.fixture(params)
+    except Exception as e:  # noqa: BLE001 - report, don't crash the pass
+        out.error = f"fixture failed: {e!r}"
+        return out
+    from ..measure import fixture_call
+    call = fixture_call(SimpleNamespace(fixture=ctx))
+    if call is None:
+        out.convention = False
+        return out
+    fn, args = call
+    jax = sys.modules.get("jax")
+    if jax is None:
+        out.error = "jax not loaded; nothing to lower"
+        return out
+    try:
+        lowered = fn.lower(*args) if hasattr(fn, "lower") \
+            else jax.jit(fn).lower(*args)
+        out.hlo_text = lowered.compile().as_text()
+    except Exception as e:  # noqa: BLE001
+        out.error = f"would not lower/compile: {e!r}"
+        return out
+    out.operand_leaves = _count_leaves(args)
+    _analyze_text(out)
+    return out
+
+
+def _analyze_text(out: CompiledWorkload) -> None:
+    from repro.roofline.hlo import analyze_hlo, parse_module
+    comps = parse_module(out.hlo_text)
+    ops: List[str] = []
+    for comp in comps.values():
+        for ins in comp.instrs.values():
+            if ins.opcode not in PASSIVE_OPS:
+                ops.append(ins.opcode)
+    out.compute_ops = len(ops)
+    if not ops:
+        seen: List[str] = []
+        for comp in comps.values():
+            for ins in comp.instrs.values():
+                if ins.opcode not in seen:
+                    seen.append(ins.opcode)
+        out.passive_only_ops = seen
+    entry = None
+    for comp_name, comp in comps.items():
+        if "main" in comp_name:
+            entry = comp
+            break
+    if entry is not None:
+        out.entry_params = sum(1 for ins in entry.instrs.values()
+                               if ins.opcode == "parameter")
+    try:
+        out.flops = analyze_hlo(out.hlo_text).flops
+    except Exception as e:  # noqa: BLE001 - flops are advisory here
+        log.debug("lint: flops analysis failed for %s: %s",
+                  out.instance, e)

@@ -1,0 +1,200 @@
+"""Built-in AST-tier rules (SCOPE0xx/SCOPE1xx): source-level hazards.
+
+Each rule names a way a benchmark silently measures the wrong thing.
+The catalog (ids, what the hazard does to the numbers, and how to fix
+each one) is docs/linting.md; tests/test_lint.py keeps one triggering
+and one clean family per rule.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+from .framework import FamilyContext, FamilyRule, Finding, LintContext, \
+    register_rule
+
+#: Array-constructor / compile entry points that belong in a fixture —
+#: inside the timed loop they bill allocation/trace/compile time to the
+#: workload.  Keyed by full dotted call name as written in the body.
+_MODULE_ALIASES = ("np", "numpy", "jnp", "jax.numpy")
+_ALLOC_FNS = ("ones", "zeros", "full", "empty", "arange", "linspace",
+              "eye", "ones_like", "zeros_like", "asarray", "array")
+TIMED_REGION_BANNED = frozenset(
+    {f"{mod}.{fn}" for mod in _MODULE_ALIASES for fn in _ALLOC_FNS}
+    | {"jax.jit", "jax.grad", "jax.vmap", "jax.pmap", "jax.value_and_grad",
+       "jax.make_mesh", "jax.device_put",
+       "jax.random.PRNGKey", "jax.random.key", "jax.random.normal",
+       "jax.random.uniform", "jax.random.randint", "jax.random.split"})
+
+#: Host clocks a body must never read — the meter stack owns timing
+#: (manual-time families are the sanctioned exception).
+WALL_CLOCK_CALLS = frozenset({
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+})
+
+
+@register_rule
+class UnanalyzableFamily(FamilyRule):
+    """Source unavailable/unparseable → the AST tier is flying blind."""
+
+    id = "SCOPE000"
+    severity = "info"
+    title = ("benchmark body source could not be captured or parsed; "
+             "AST-tier rules were skipped for this family")
+    fix_hint = ("register a plain function (not a lambda/partial) so "
+                "inspect.getsource sees it")
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        if not fam.analysis.analyzable():
+            yield self.finding(fam)
+
+
+@register_rule
+class UnfencedAsyncBody(FamilyRule):
+    """Body never declares deliverables and family has no sync fence.
+
+    On an async-dispatch backend (JAX) the timed loop then measures
+    *enqueue* cost: calls return as soon as work is queued, the clock
+    stops, and the device finishes afterwards, unobserved.
+    """
+
+    id = "SCOPE101"
+    severity = "error"
+    title = ("timed loop never calls state.deliver and the family "
+             "declares no set_sync fence — on an async backend "
+             "real_time measures dispatch enqueue, not the workload")
+    fix_hint = ("declare the output with state.deliver(out) inside the "
+                "loop, or mark the family host-synchronous with "
+                "bench.set_sync(lambda ctx: None)")
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        bench = fam.bench
+        ana = fam.analysis
+        if not ana.analyzable() or not ana.timed_loops:
+            return
+        if bench.use_manual_time or bench.sync_fn is not None:
+            return
+        if ana.calls_state_method("deliver"):
+            return
+        yield self.finding(fam)
+
+
+@register_rule
+class TimedRegionSetupWork(FamilyRule):
+    """Allocation / jit construction inside the timed loop."""
+
+    id = "SCOPE102"
+    severity = "error"
+    title = ""  # built per finding
+    fix_hint = ("move allocation and jit/grad construction into a "
+                "set_fixture(setup) — fixtures run untimed, and the "
+                "warm phase reports compile time separately")
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        if not fam.analysis.analyzable():
+            return
+        for call in fam.analysis.timed_region_calls():
+            if call.name in TIMED_REGION_BANNED:
+                yield self.finding(
+                    fam,
+                    message=(f"{call.name}() runs inside the timed loop "
+                             f"(line {call.line}): allocation/compilation "
+                             f"is billed to every measured iteration"))
+
+
+@register_rule
+class DeadParamAxis(FamilyRule):
+    """A declared axis neither the body nor the fixture ever reads."""
+
+    id = "SCOPE103"
+    severity = "warning"
+    title = ""
+    fix_hint = ("drop the axis from the ParamSpace, or read it "
+                "(state.params.<axis> in the body, params.<axis> in "
+                "the fixture)")
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        dead = fam.analysis.dead_axes()
+        if not dead:
+            return
+        for axis in dead:
+            yield self.finding(
+                fam,
+                message=(f"parameter axis {axis!r} is declared but never "
+                         f"read by the body or fixture — every point "
+                         f"along it re-measures the same workload"))
+
+
+@register_rule
+class NoThroughputCounters(FamilyRule):
+    """No bytes/items/counters: the record is a bare time."""
+
+    id = "SCOPE104"
+    severity = "warning"
+    title = ("body sets no throughput signal (set_bytes_processed / "
+             "set_items_processed / state.counters) — records carry "
+             "times but nothing to normalize them by, so cross-size "
+             "comparisons and roofline columns stay empty")
+    fix_hint = ("set bytes/items processed per iteration, or record a "
+                "workload counter (state.counters[...] = ...)")
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        ana = fam.analysis
+        if not ana.analyzable() or not ana.timed_loops:
+            return
+        if ana.calls_state_method("set_bytes_processed") \
+                or ana.calls_state_method("set_items_processed") \
+                or ana.sets_counters():
+            return
+        yield self.finding(fam)
+
+
+@register_rule
+class WallClockInBody(FamilyRule):
+    """Body reads a host clock — timing belongs to the meter stack."""
+
+    id = "SCOPE105"
+    severity = "error"
+    title = ""
+    fix_hint = ("delete the clock call; the wall/cpu meters own timing "
+                "(a family that must time itself should declare "
+                "manual_time() and use state.set_iteration_time)")
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        if fam.bench.use_manual_time or not fam.analysis.analyzable():
+            return
+        for call in fam.analysis.body_calls():
+            if call.name in WALL_CLOCK_CALLS:
+                yield self.finding(
+                    fam,
+                    message=(f"{call.name}() called in the benchmark body "
+                             f"(line {call.line}): bodies must not read "
+                             f"host clocks — the meter stack owns timing"))
+
+
+@register_rule
+class ManualTimeNeverReported(FamilyRule):
+    """manual_time() family that never calls set_iteration_time."""
+
+    id = "SCOPE106"
+    severity = "error"
+    title = ("family declares manual_time() but the body never calls "
+             "state.set_iteration_time — every record reports zero "
+             "time, and cost hints derived from it schedule garbage")
+    fix_hint = ("call state.set_iteration_time(seconds) inside the "
+                "loop, or drop manual_time()")
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        if not fam.bench.use_manual_time or not fam.analysis.analyzable():
+            return
+        if not fam.analysis.calls_state_method("set_iteration_time"):
+            yield self.finding(fam)

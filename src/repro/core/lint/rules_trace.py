@@ -1,0 +1,103 @@
+"""Built-in trace-tier rules (SCOPE2xx): optimized-HLO hazards.
+
+These rules compile the fixture's workload once (never running the
+body) and read what XLA actually kept — the ``benchmark::DoNotOptimize``
+class of bugs that no amount of source staring can find.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+from .framework import FamilyContext, FamilyRule, Finding, LintContext, \
+    register_rule
+
+
+@register_rule
+class WorkloadOptimizedAway(FamilyRule):
+    """Optimized module has no compute instructions left."""
+
+    id = "SCOPE201"
+    severity = "error"
+    title = ""
+    fix_hint = ("make the output depend on the operands (not on "
+                "trace-time constants) and deliver it — XLA cannot fold "
+                "a computation whose inputs are runtime parameters and "
+                "whose output escapes")
+    requires_compile = True
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        out = fam.compiled
+        if out is None or not out.analyzed():
+            return
+        if out.compute_ops == 0:
+            ops = ", ".join(out.passive_only_ops) or "nothing"
+            yield self.finding(
+                fam,
+                message=(f"workload for instance {out.instance!r} compiles "
+                         f"to no compute instructions (optimized HLO "
+                         f"contains only: {ops}) — XLA constant-folded or "
+                         f"dead-code-eliminated the computation, so timings "
+                         f"measure the copy path, not the op"))
+        elif out.entry_params == 0 and out.operand_leaves > 0:
+            yield self.finding(
+                fam,
+                message=(f"workload for instance {out.instance!r} takes no "
+                         f"runtime parameters despite {out.operand_leaves} "
+                         f"fixture operand(s) — the computation was folded "
+                         f"at trace time and re-runs a precomputed result"))
+
+
+@register_rule
+class DeadOperand(FamilyRule):
+    """Fixture operands the compiled entry never consumes."""
+
+    id = "SCOPE202"
+    severity = "warning"
+    title = ""
+    fix_hint = ("drop the unused operand from the fixture tuple, or fix "
+                "the workload to actually consume it")
+    requires_compile = True
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        out = fam.compiled
+        if out is None or not out.analyzed():
+            return
+        if 0 < out.entry_params < out.operand_leaves:
+            yield self.finding(
+                fam,
+                message=(f"fixture for instance {out.instance!r} supplies "
+                         f"{out.operand_leaves} operand leaves but the "
+                         f"compiled entry consumes only {out.entry_params} "
+                         f"— the rest were dead-code-eliminated at trace "
+                         f"time, so part of the declared workload is "
+                         f"never measured"))
+
+
+@register_rule
+class OpaqueFixture(FamilyRule):
+    """Fixture context does not follow ``(callable, *operands)``."""
+
+    id = "SCOPE203"
+    severity = "info"
+    title = ("fixture context does not follow the (callable, *operands) "
+             "convention — the compile tier and the cost-model meter "
+             "cannot inspect this workload")
+    fix_hint = ("return (jitted_fn, arg0, arg1, ...) from the fixture to "
+                "opt into HLO-based checks and cost metrics")
+    requires_compile = True
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        out = fam.compiled
+        if out is None:
+            return
+        if not out.convention:
+            yield self.finding(fam)
+        elif out.error:
+            yield self.finding(
+                fam,
+                message=(f"workload for instance {out.instance!r} could "
+                         f"not be compiled for inspection: {out.error}"),
+                fix_hint="")

@@ -40,9 +40,9 @@ from .baseline import (compare_documents, compare_main, format_comparisons,
                        summarize)
 from .benchmark import parse_param_filter
 from .cli_examples import epilog
-from .measure import parse_meters
 from .flags import FLAGS
 from .hooks import HOOKS
+from .measure import parse_meters
 from .orchestrate import OrchestratorOptions, execute
 from .plan import build_plan, load_cost_hints, scope_worklist
 from .registry import REGISTRY
@@ -60,6 +60,8 @@ results, and render reports.
 commands:
   run       run benchmarks (the default when COMMAND is omitted)
   plan      print the work plan with predicted costs and worker bins
+  lint      static-analyze benchmark families for measurement-corrupting
+            bugs (nothing runs, nothing is timed)
   compare   mean/stddev-aware diff of two result documents
   report    static HTML/Markdown report for a run or the run history
 
@@ -82,6 +84,9 @@ def main(argv: Optional[List[str]] = None,
         return report_main(argv[1:])
     if argv and argv[0] == "plan":
         return plan_main(argv[1:], scope_modules)
+    if argv and argv[0] == "lint":
+        from .lint import lint_main
+        return lint_main(argv[1:], scope_modules)
     if argv and argv[0] == "run":
         argv = argv[1:]
     return run_main(argv, scope_modules)
@@ -140,6 +145,14 @@ def build_run_parser() -> argparse.ArgumentParser:
                           "the mean/median/stddev aggregate records "
                           "(throughput, compile time and meter counters "
                           "are carried onto them)")
+    sel.add_argument("--lint", action="store_true",
+                     help="static-analyze the selected families before "
+                          "running (python -m repro lint): error-severity "
+                          "findings abort the run before anything is "
+                          "timed")
+    sel.add_argument("--strict", action="store_true",
+                     help="with --lint, abort on warning-severity "
+                          "findings too")
     sel.add_argument("--jobs", type=int, default=1,
                      help="run work in N parallel isolated workers")
     sel.add_argument("--isolate", default="auto",
@@ -253,6 +266,20 @@ def run_main(argv: List[str],
         log.error("no benchmarks match %r%s", pattern,
                   f" with --param {sel_ns.param}" if param_filter else "")
         return 1
+    if sel_ns.lint:
+        # pre-flight: a family the linter can prove mismeasures must not
+        # burn a run.  Same rules as `python -m repro lint`; findings go
+        # to stderr so the GB-JSON stream on stdout stays parseable.
+        from .lint import run_lint
+        report = run_lint(benches, scope_names=sorted(
+            {b.scope for b in benches}))
+        if report.findings:
+            print(report.format_text(), file=sys.stderr)
+        if report.failed(sel_ns.strict):
+            log.error("lint pre-flight failed (%s); nothing was run",
+                      report.summary())
+            return 1
+        log.info("lint pre-flight clean: %s", report.summary())
     # don't dispatch workers for scopes the filter selects nothing from —
     # each would pay a fresh interpreter + JAX import to return 0 records
     matched = {b.scope for b in benches}

@@ -49,7 +49,6 @@ copy of ``real_time``.
 from __future__ import annotations
 
 import sys
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .logging import get_logger

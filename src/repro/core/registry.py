@@ -14,7 +14,7 @@ from __future__ import annotations
 import re
 from typing import Callable, Dict, List, Optional, Sequence
 
-from .benchmark import Benchmark, BenchmarkFn, match_params
+from .benchmark import Benchmark, BenchmarkFn, _capture_source, match_params
 
 
 class BenchmarkRegistry:
@@ -81,6 +81,9 @@ def register_benchmark(name: str, fn: BenchmarkFn, scope: str = "core",
     reg = registry if registry is not None else REGISTRY
     full = f"{scope}/{name}" if not name.startswith(scope + "/") else name
     bench = Benchmark(name=full, fn=fn, scope=scope, **kwargs)
+    # capture the body's source now for the static-analysis pass
+    # (repro.core.lint); None when inspect cannot see it
+    bench.source, bench.source_file, bench.source_line = _capture_source(fn)
     return reg.register(bench)
 
 

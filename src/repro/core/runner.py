@@ -40,7 +40,7 @@ import math
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, TextIO, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .benchmark import (Benchmark, Params, State, TIME_UNITS, match_params)
 from .logging import get_logger

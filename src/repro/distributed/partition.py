@@ -28,7 +28,7 @@ replication — a config can never fail to shard, it can only shard worse
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

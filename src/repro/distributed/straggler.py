@@ -16,9 +16,8 @@ synthetic timing traces (the detection code path is the real one).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
 import numpy as np
 

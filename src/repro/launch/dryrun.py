@@ -21,7 +21,6 @@ Usage:
   python -m repro.launch.dryrun --arch all --shape all --multi-pod
 """
 import argparse
-import dataclasses
 import json
 import sys
 import time
@@ -30,6 +29,7 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed import partition as part
 from repro.distributed.logical import default_rules, logical_rules
@@ -40,8 +40,6 @@ from repro.models.config import ModelConfig
 from repro.roofline.analysis import analyze_compiled, model_flops
 from repro.train import AdamWConfig, make_train_step
 from repro.train.step import make_init_fn
-
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 RESULTS_DEFAULT = "results/dryrun"
 

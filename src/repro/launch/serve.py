@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core.logging import get_logger
 from repro.models import build, get_config
-from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve import ServeConfig, ServeEngine
 
 log = get_logger("serve-main")
 

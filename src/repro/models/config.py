@@ -8,8 +8,8 @@ variants.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, Tuple
 
 
 @dataclass(frozen=True)

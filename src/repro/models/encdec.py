@@ -10,7 +10,7 @@ config (norm="layernorm", act="gelu", use_rope=False).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

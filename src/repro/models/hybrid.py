@@ -107,14 +107,17 @@ def _superblock(cfg: ModelConfig, p: Params, x: jax.Array,
     for j, (mixer, is_moe) in enumerate(pat):
         h = L.rms_norm({"scale": p["ln1"][j]}, x, cfg.norm_eps)
         if mixer == "ssm":
-            pm = at(p["mamba"], i_ssm); i_ssm += 1
+            pm = at(p["mamba"], i_ssm)
+            i_ssm += 1
             if collect:
                 y, st, tl = L.mamba2_block(pm, h, cfg, return_state=True)
-                states.append(st); tails.append(tl)
+                states.append(st)
+                tails.append(tl)
             else:
                 y = L.mamba2_block(pm, h, cfg)
         else:
-            pa = at(p["attn"], i_attn); i_attn += 1
+            pa = at(p["attn"], i_attn)
+            i_attn += 1
             q, k, v = L._qkv(pa, h, cfg.num_heads, cfg.num_kv_heads, cfg.hd,
                              cfg.qk_norm, cfg.norm_eps)
             q = L.apply_rope(q, positions, cfg.rope_theta,
@@ -133,10 +136,12 @@ def _superblock(cfg: ModelConfig, p: Params, x: jax.Array,
         x = x + y
         h = L.rms_norm({"scale": p["ln2"][j]}, x, cfg.norm_eps)
         if is_moe:
-            m, aux = L.moe_layer(at(p["moe"], i_moe), h, cfg); i_moe += 1
+            m, aux = L.moe_layer(at(p["moe"], i_moe), h, cfg)
+            i_moe += 1
             aux_total = aux_total + aux
         else:
-            m = L.mlp(at(p["mlp"], i_dense), h, cfg.act); i_dense += 1
+            m = L.mlp(at(p["mlp"], i_dense), h, cfg.act)
+            i_dense += 1
         x = x + m
     caches = None
     if collect:
@@ -248,7 +253,8 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
                     lambda a, b: a.astype(b.dtype), t_n, tail_i))
                 i_ssm += 1
             else:
-                pa = at(p["attn"], i_attn); i_attn += 1
+                pa = at(p["attn"], i_attn)
+                i_attn += 1
                 q, k, v = L._qkv(pa, h, cfg.num_heads, cfg.num_kv_heads,
                                  cfg.hd, cfg.qk_norm, cfg.norm_eps)
                 q = L.apply_rope(q, positions, cfg.rope_theta,
@@ -265,9 +271,11 @@ def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
             x = x + y
             h = L.rms_norm({"scale": p["ln2"][j]}, x, cfg.norm_eps)
             if is_moe:
-                m, _ = L.moe_layer(at(p["moe"], i_moe), h, cfg); i_moe += 1
+                m, _ = L.moe_layer(at(p["moe"], i_moe), h, cfg)
+                i_moe += 1
             else:
-                m = L.mlp(at(p["mlp"], i_dense), h, cfg.act); i_dense += 1
+                m = L.mlp(at(p["mlp"], i_dense), h, cfg.act)
+                i_dense += 1
             x = x + m
         return x, (k_c, v_c, jnp.stack(st_new),
                    jax.tree_util.tree_map(lambda *a: jnp.stack(a), *cv_new))

@@ -547,7 +547,6 @@ def mlp(p: Params, x: jax.Array, act: str = "silu") -> jax.Array:
 def init_moe(key, d: int, E: int, ff: int, n_shared: int,
              act: str = "silu") -> Params:
     ks = jax.random.split(key, 5)
-    n_mats = 3 if act == "silu" else 2
     p: Params = {
         "router": dense_init(ks[0], (d, E), scale=0.02),
         "w_up": dense_init(ks[1], (E, d, ff)),

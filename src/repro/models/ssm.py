@@ -5,7 +5,7 @@ recurrent state update — which is why this family runs the long_500k shape.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

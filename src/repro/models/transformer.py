@@ -10,8 +10,7 @@ HLO is one while-loop regardless of depth — this is what keeps the
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -149,7 +148,8 @@ def hidden(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
             x, (a, kv_i) = block(x, p_i)
             auxs.append(a)
             if collect_kv:
-                ks.append(kv_i[0]); vs.append(kv_i[1])
+                ks.append(kv_i[0])
+                vs.append(kv_i[1])
         aux = jnp.sum(jnp.stack(auxs))
         kv = (jnp.stack(ks), jnp.stack(vs)) if collect_kv else None
     x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)

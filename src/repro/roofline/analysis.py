@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import asdict, dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict
 
 from repro.core.sysinfo import TPU_V5E
 

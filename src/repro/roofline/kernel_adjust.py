@@ -23,7 +23,7 @@ bytes (ignores VMEM-resident double-buffering wins).
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Set, Tuple
+from typing import Dict, Set, Tuple
 
 from .hlo import (_DTYPE_BYTES, _SKIP_BYTES_OPS, _SLICING_OPS,
                   _fusion_out_bytes, _fusion_param_traffic, parse_module,

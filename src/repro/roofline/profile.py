@@ -15,7 +15,7 @@ from typing import List, Tuple
 
 from .hlo import (_DTYPE_BYTES, _SKIP_BYTES_OPS, _SLICING_OPS, _dot_flops,
                   _fusion_out_bytes, _fusion_param_traffic, parse_module,
-                  parse_shape, shape_bytes)
+                  shape_bytes)
 
 
 def top_contributors(text: str, n: int = 15):

@@ -51,12 +51,12 @@ from __future__ import annotations
 import os
 from typing import Any, Dict, List, Optional, Tuple
 
+import matplotlib
 import numpy as np
 import yaml
 
-from .model import BenchmarkFile, load
+from .model import load
 
-import matplotlib
 matplotlib.use("Agg")                     # headless
 import matplotlib.pyplot as plt           # noqa: E402
 

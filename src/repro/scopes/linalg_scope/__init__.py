@@ -43,6 +43,8 @@ def _register(registry: BenchmarkRegistry) -> None:
         fn, a = state.fixture
         while state.keep_running():
             state.deliver(fn(a))
+        # ~n^3/3 fused multiply-adds for a dense Cholesky factorization
+        state.counters["flops"] = state.params.n ** 3 / 3.0
     cholesky.args([256]).args([512]).set_arg_names(["n"])
     cholesky.set_fixture(cholesky_setup)
 
@@ -59,6 +61,8 @@ def _register(registry: BenchmarkRegistry) -> None:
         fn, a, b = state.fixture
         while state.keep_running():
             state.deliver(fn(a, b))
+        # n^2 multiply-adds per right-hand side, 16 rhs columns
+        state.counters["flops"] = state.params.n ** 2 * 16.0
     triangular_solve.args([256]).set_arg_names(["n"])
     triangular_solve.set_fixture(triangular_solve_setup)
 

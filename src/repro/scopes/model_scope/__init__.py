@@ -79,6 +79,8 @@ def _register(registry: BenchmarkRegistry) -> None:
         state.counters["cells"] = n
         state.counters["sum_bound_s"] = bound
     dryrun_rooflines.set_iterations(1)
+    # pure host-side JSON aggregation — nothing async to fence
+    dryrun_rooflines.set_sync(lambda ctx: None)
 
 
 SCOPE = Scope(name=NAME, version="2.0.0",

@@ -57,6 +57,9 @@ def _register(registry: BenchmarkRegistry) -> None:
         fn, q, k, v = state.fixture
         while state.keep_running():
             state.deliver(fn(q, k, v))
+        S = state.params.seq
+        # fwd + recompute + bwd ~ 2.5x the forward attention flops
+        state.counters["attn_flops"] = 2.5 * 4.0 * 2 * 4 * S * S * 64 / 2
     flash_attention_bwd.args([256]).args([512]).set_arg_names(["seq"])
     flash_attention_bwd.set_fixture(flash_bwd_setup)
 

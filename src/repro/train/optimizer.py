@@ -6,9 +6,8 @@ dtype; weight decay is decoupled (AdamW); a global-norm clip runs upstream.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

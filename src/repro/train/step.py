@@ -8,7 +8,7 @@ microbatch k overlaps the backward of microbatch k+1.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Checkpoint store/manager: roundtrip, atomicity, GC, corruption, reshard."""
-import json
 import os
 
 import jax

@@ -1,5 +1,4 @@
 """Gradient compression: codecs + error-feedback contraction property."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis_compat import given, settings, st

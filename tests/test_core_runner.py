@@ -2,7 +2,6 @@
 import json
 import time
 
-from repro.core.benchmark import Benchmark
 from repro.core.registry import BenchmarkRegistry, benchmark
 from repro.core.runner import RunOptions, run_benchmarks, write_json
 

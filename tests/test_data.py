@@ -34,7 +34,6 @@ def test_resume_replays_exactly():
 
 
 def test_host_sharding_disjoint_and_complete():
-    full = SyntheticLM(cfg(host_count=1, host_index=0)).batch(2)
     parts = [SyntheticLM(cfg(host_count=2, host_index=h)).batch(2)
              for h in (0, 1)]
     assert all(p["tokens"].shape[0] == 2 for p in parts)

@@ -1,8 +1,5 @@
 """Run-history store: append/verdicts/dedup, windowed queries, drift
 detection, and the history-as-baseline loader (repro.core.history)."""
-import json
-import os
-
 import pytest
 
 from repro.core import history as hist

@@ -1,0 +1,772 @@
+"""repro.core.lint: every built-in rule has a triggering family and a
+clean family; the CLI gates exit codes; and the whole pass provably
+never executes a benchmark body."""
+import json
+import sys
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParamSpace, Scope, State
+from repro.core.benchmark import Benchmark
+from repro.core.flags import FlagRegistry
+from repro.core.hooks import HookChain
+from repro.core.lint import (RULES, FamilyAnalysis, FamilyRule, LintReport,
+                             Rule, lint_main, parse_rules, register_rule,
+                             run_lint)
+from repro.core.registry import BenchmarkRegistry, register_benchmark
+from repro.core.scope import BUILTIN_SCOPES, ScopeManager
+
+
+def reg():
+    return BenchmarkRegistry()
+
+
+def rules_of(report, family=None):
+    return sorted({f.rule for f in report.findings
+                   if family is None or f.family == family})
+
+
+def lint(registry, **kwargs):
+    kwargs.setdefault("compile_checks", False)
+    return run_lint(registry.all(), **kwargs)
+
+
+@pytest.fixture
+def no_body_runs(monkeypatch):
+    """Poison the timed loop: any benchmark body that starts iterating
+    blows up the test — the linter must never get there."""
+    def boom(self):
+        raise AssertionError("lint executed a benchmark body")
+    monkeypatch.setattr(State, "keep_running", boom)
+
+
+# ---------------------------------------------------------------------------
+# SCOPE000 — unanalyzable body
+# ---------------------------------------------------------------------------
+
+def test_scope000_triggers_on_sourceless_body(no_body_runs):
+    r = reg()
+    ns = {}
+    exec("def body(state):\n"
+         "    while state.keep_running():\n"
+         "        pass\n", ns)
+    register_benchmark("nosource", ns["body"], scope="s", registry=r)
+    assert "SCOPE000" in rules_of(lint(r))
+
+
+def test_scope000_clean_on_plain_function(no_body_runs):
+    r = reg()
+
+    def body(state):
+        while state.keep_running():
+            state.deliver(1)
+        state.set_items_processed(1)
+    register_benchmark("plain", body, scope="s", registry=r)
+    assert lint(r).findings == []
+
+
+# ---------------------------------------------------------------------------
+# SCOPE101 — unfenced async body
+# ---------------------------------------------------------------------------
+
+def _quietly(b: Benchmark) -> Benchmark:
+    """Silence the rules a minimal body would otherwise trip."""
+    b.set_sync(lambda ctx: None)
+    return b
+
+
+def test_scope101_triggers_without_deliver_or_sync(no_body_runs):
+    r = reg()
+
+    def body(state):
+        while state.keep_running():
+            pass
+        state.set_items_processed(1)
+    register_benchmark("unfenced", body, scope="s", registry=r)
+    assert rules_of(lint(r)) == ["SCOPE101"]
+
+
+def test_scope101_clean_when_delivering(no_body_runs):
+    r = reg()
+
+    def body(state):
+        while state.keep_running():
+            state.deliver(41 + 1)
+        state.set_items_processed(1)
+    register_benchmark("delivers", body, scope="s", registry=r)
+    assert lint(r).findings == []
+
+
+def test_scope101_clean_with_sync_fence_or_manual_time(no_body_runs):
+    r = reg()
+
+    def fenced(state):
+        while state.keep_running():
+            pass
+        state.set_items_processed(1)
+    _quietly(register_benchmark("fenced", fenced, scope="s", registry=r))
+
+    def manual(state):
+        while state.keep_running():
+            state.set_iteration_time(1e-3)
+        state.set_items_processed(1)
+    register_benchmark("manual", manual, scope="s",
+                       registry=r).manual_time()
+    assert lint(r).findings == []
+
+
+# ---------------------------------------------------------------------------
+# SCOPE102 — allocation/compilation inside the timed loop
+# ---------------------------------------------------------------------------
+
+def test_scope102_triggers_on_alloc_in_timed_loop(no_body_runs):
+    r = reg()
+
+    def body(state):
+        while state.keep_running():
+            x = jnp.ones(16)
+            state.deliver(jax.jit(lambda v: v * 2)(x))
+        state.set_items_processed(16)
+    register_benchmark("hot_alloc", body, scope="s", registry=r)
+    found = [f for f in lint(r).findings if f.rule == "SCOPE102"]
+    assert len(found) == 2          # jnp.ones and jax.jit
+    assert all(f.severity == "error" for f in found)
+
+
+def test_scope102_clean_when_setup_is_outside_the_loop(no_body_runs):
+    r = reg()
+
+    def body(state):
+        x = jnp.ones(16)            # before the first keep_running():
+        fn = jax.jit(lambda v: v * 2)   # untimed by construction
+        while state.keep_running():
+            state.deliver(fn(x))
+        state.set_items_processed(16)
+    register_benchmark("cold_alloc", body, scope="s", registry=r)
+    assert lint(r).findings == []
+
+
+# ---------------------------------------------------------------------------
+# SCOPE103 — dead parameter axes
+# ---------------------------------------------------------------------------
+
+def test_scope103_triggers_on_unread_axis(no_body_runs):
+    r = reg()
+
+    def body(state):
+        n = state.params.n
+        while state.keep_running():
+            state.deliver(n * 2)
+        state.set_items_processed(n)
+    b = register_benchmark("deadaxis", body, scope="s", registry=r)
+    b.param_space(ParamSpace.product(dtype=["f32", "f64"], n=[4]))
+    found = [f for f in lint(r).findings if f.rule == "SCOPE103"]
+    assert len(found) == 1 and "'dtype'" in found[0].message
+
+
+def test_scope103_clean_when_fixture_reads_the_axis(no_body_runs):
+    r = reg()
+
+    def setup(params):
+        return np.zeros(params.n, dtype=params.dtype)
+
+    def body(state):
+        x = state.fixture
+        while state.keep_running():
+            state.deliver(x + 1)
+        state.set_items_processed(state.params.n)
+    b = register_benchmark("liveaxis", body, scope="s", registry=r)
+    b.param_space(ParamSpace.product(dtype=["f32"], n=[4]))
+    b.set_fixture(setup)
+    assert lint(r).findings == []
+
+
+def test_scope103_stays_quiet_when_params_escape(no_body_runs):
+    r = reg()
+
+    def helper(p):
+        return p
+
+    def body(state):
+        cfg = helper(state.params)      # analyzer can't see inside
+        while state.keep_running():
+            state.deliver(cfg)
+        state.set_items_processed(1)
+    b = register_benchmark("escapes", body, scope="s", registry=r)
+    b.param_space(ParamSpace.product(dtype=["f32"], n=[4]))
+    assert rules_of(lint(r)) == []
+
+
+def test_scope103_reads_via_state_range_and_alias(no_body_runs):
+    r = reg()
+
+    def legacy(state):
+        n = state.range(0)
+        while state.keep_running():
+            state.deliver(n)
+        state.set_items_processed(n)
+    b = register_benchmark("legacy_range", legacy, scope="s", registry=r)
+    b.args([4]).set_arg_names(["n"])
+
+    def aliased(state):
+        p = state.params
+        while state.keep_running():
+            state.deliver(p.n)
+        state.set_items_processed(p.n)
+    b2 = register_benchmark("aliased", aliased, scope="s", registry=r)
+    b2.param_space(ParamSpace.product(n=[4]))
+    assert lint(r).findings == []
+
+
+# ---------------------------------------------------------------------------
+# SCOPE104 — no throughput signal
+# ---------------------------------------------------------------------------
+
+def test_scope104_triggers_without_counters(no_body_runs):
+    r = reg()
+
+    def body(state):
+        while state.keep_running():
+            state.deliver(1)
+    register_benchmark("bare_time", body, scope="s", registry=r)
+    assert rules_of(lint(r)) == ["SCOPE104"]
+
+
+def test_scope104_clean_with_any_signal(no_body_runs):
+    r = reg()
+
+    def with_bytes(state):
+        while state.keep_running():
+            state.deliver(1)
+        state.set_bytes_processed(64)
+    register_benchmark("with_bytes", with_bytes, scope="s", registry=r)
+
+    def with_counter(state):
+        while state.keep_running():
+            state.deliver(1)
+        state.counters["flops"] = 2.0
+    register_benchmark("with_counter", with_counter, scope="s", registry=r)
+    assert lint(r).findings == []
+
+
+# ---------------------------------------------------------------------------
+# SCOPE105 — wall-clock reads in the body
+# ---------------------------------------------------------------------------
+
+def test_scope105_triggers_on_host_clock(no_body_runs):
+    r = reg()
+
+    def body(state):
+        import time
+        t0 = time.perf_counter()
+        while state.keep_running():
+            state.deliver(time.perf_counter() - t0)
+        state.set_items_processed(1)
+    register_benchmark("clocky", body, scope="s", registry=r)
+    found = [f for f in lint(r).findings if f.rule == "SCOPE105"]
+    assert len(found) == 2 and found[0].severity == "error"
+
+
+def test_scope105_exempts_manual_time_families(no_body_runs):
+    r = reg()
+
+    def body(state):
+        import time
+        while state.keep_running():
+            t0 = time.perf_counter()
+            state.deliver(1)
+            state.set_iteration_time(time.perf_counter() - t0)
+        state.set_items_processed(1)
+    register_benchmark("manual_clock", body, scope="s",
+                       registry=r).manual_time()
+    assert lint(r).findings == []
+
+
+# ---------------------------------------------------------------------------
+# SCOPE106 — manual_time without set_iteration_time
+# ---------------------------------------------------------------------------
+
+def test_scope106_triggers_when_time_is_never_reported(no_body_runs):
+    r = reg()
+
+    def body(state):
+        while state.keep_running():
+            state.deliver(1)
+        state.set_items_processed(1)
+    register_benchmark("silent_manual", body, scope="s",
+                       registry=r).manual_time()
+    assert rules_of(lint(r)) == ["SCOPE106"]
+
+
+# ---------------------------------------------------------------------------
+# SCOPE201 — workload optimized away (the DoNotOptimize class of bugs)
+# ---------------------------------------------------------------------------
+
+def _trace_findings(registry):
+    return run_lint(registry.all(), compile_checks=True).findings
+
+
+def test_undelivered_constant_output_flagged_as_dce_hazard(no_body_runs):
+    """A jitted fn whose result never depends on its operands is
+    constant-folded by XLA; the optimized-HLO diff must flag it."""
+    r = reg()
+
+    def setup(params):
+        return jax.jit(lambda x: jnp.sum(jnp.ones(4))), jnp.ones(params.n)
+
+    def body(state):
+        fn, x = state.fixture
+        while state.keep_running():
+            state.deliver(fn(x))
+        state.set_items_processed(state.params.n)
+    b = register_benchmark("folded", body, scope="s", registry=r)
+    b.param_space(ParamSpace.product(n=[4]))
+    b.set_fixture(setup)
+    found = [f for f in _trace_findings(r) if f.rule == "SCOPE201"]
+    assert len(found) == 1
+    assert found[0].severity == "error"
+
+
+def test_scope201_clean_on_real_compute(no_body_runs):
+    r = reg()
+
+    def setup(params):
+        return jax.jit(lambda x: x * 2.0 + 1.0), jnp.ones(params.n)
+
+    def body(state):
+        fn, x = state.fixture
+        while state.keep_running():
+            state.deliver(fn(x))
+        state.set_items_processed(state.params.n)
+    b = register_benchmark("computes", body, scope="s", registry=r)
+    b.param_space(ParamSpace.product(n=[4]))
+    b.set_fixture(setup)
+    assert _trace_findings(r) == []
+
+
+# ---------------------------------------------------------------------------
+# SCOPE202 — dead operands
+# ---------------------------------------------------------------------------
+
+def test_scope202_triggers_on_unconsumed_operand(no_body_runs):
+    r = reg()
+
+    def setup(params):
+        return (jax.jit(lambda x, y: x * 2.0),
+                jnp.ones(params.n), jnp.ones(params.n))
+
+    def body(state):
+        fn, x, y = state.fixture
+        while state.keep_running():
+            state.deliver(fn(x, y))
+        state.set_items_processed(state.params.n)
+    b = register_benchmark("deadop", body, scope="s", registry=r)
+    b.param_space(ParamSpace.product(n=[4]))
+    b.set_fixture(setup)
+    found = [f for f in _trace_findings(r) if f.rule == "SCOPE202"]
+    assert len(found) == 1 and "2 operand leaves" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# SCOPE203 — opaque fixture convention
+# ---------------------------------------------------------------------------
+
+def test_scope203_triggers_on_nonconforming_fixture(no_body_runs):
+    r = reg()
+
+    def setup(params):
+        return np.ones(params.n), np.ones(params.n)
+
+    def body(state):
+        x, y = state.fixture
+        while state.keep_running():
+            state.deliver(x + y)
+        state.set_items_processed(state.params.n)
+    b = register_benchmark("opaque", body, scope="s", registry=r)
+    b.param_space(ParamSpace.product(n=[4]))
+    b.set_fixture(setup)
+    found = [f for f in _trace_findings(r) if f.rule == "SCOPE203"]
+    assert len(found) == 1 and found[0].severity == "info"
+
+
+def test_trace_rules_skipped_without_compile_checks(no_body_runs):
+    r = reg()
+    report = lint(r)
+    assert "SCOPE201" not in report.rules_run
+    assert "SCOPE101" in report.rules_run
+
+
+# ---------------------------------------------------------------------------
+# SCOPE301 — duplicate points after dead-axis projection
+# ---------------------------------------------------------------------------
+
+def test_scope301_triggers_on_projected_duplicates(no_body_runs):
+    r = reg()
+
+    def body(state):
+        n = state.params.n
+        while state.keep_running():
+            state.deliver(n)
+        state.set_items_processed(n)
+    b = register_benchmark("dupes", body, scope="s", registry=r)
+    b.param_space(ParamSpace.product(trial=[1, 2], n=[4]))
+    found = [f for f in lint(r).findings if f.rule == "SCOPE301"]
+    assert len(found) == 1
+    assert "s/dupes/trial:1/n:4" in found[0].message
+    assert "s/dupes/trial:2/n:4" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# SCOPE302 — instance-name collisions across families
+# ---------------------------------------------------------------------------
+
+def test_scope302_triggers_on_instance_name_collision(no_body_runs):
+    r = reg()
+
+    def swept(state):
+        n = state.range(0)
+        while state.keep_running():
+            state.deliver(n)
+        state.set_items_processed(n)
+    b = register_benchmark("x", swept, scope="s", registry=r)
+    b.args([4]).set_arg_names(["n"])
+
+    def fixed(state):
+        while state.keep_running():
+            state.deliver(4)
+        state.set_items_processed(4)
+    register_benchmark("x/n:4", fixed, scope="s", registry=r)
+    found = [f for f in lint(r).findings if f.rule == "SCOPE302"]
+    assert len(found) == 1 and "'s/x/n:4'" in found[0].message
+    assert found[0].severity == "error"
+
+
+# ---------------------------------------------------------------------------
+# SCOPE303 — empty sweeps and empty scopes
+# ---------------------------------------------------------------------------
+
+def test_scope303_triggers_on_zero_instances_and_empty_scope(no_body_runs):
+    r = reg()
+
+    def body(state):
+        n = state.params.n
+        while state.keep_running():
+            state.deliver(n)
+        state.set_items_processed(n)
+    b = register_benchmark("empty", body, scope="s", registry=r)
+    b.param_space(ParamSpace.product(n=[]))
+    report = run_lint(r.all(), scope_names=["s", "ghost"],
+                      compile_checks=False)
+    found = [f for f in report.findings if f.rule == "SCOPE303"]
+    assert {f.target() for f in found} == {"s/empty", "ghost"}
+
+
+# ---------------------------------------------------------------------------
+# framework: registration, selection, reporting, isolation
+# ---------------------------------------------------------------------------
+
+def test_register_rule_validates_and_rejects_duplicates():
+    with pytest.raises(ValueError, match="no id"):
+        register_rule(type("R", (Rule,), {}))
+    with pytest.raises(ValueError, match="severity"):
+        register_rule(type("R", (Rule,), {"id": "X1", "severity": "fatal"}))
+    with pytest.raises(ValueError, match="already registered"):
+        register_rule(type("R", (Rule,), {"id": "SCOPE101",
+                                          "severity": "error"}))
+
+
+def test_parse_rules_validates_ids():
+    assert parse_rules("SCOPE101, SCOPE201,SCOPE101") == \
+        ["SCOPE101", "SCOPE201"]
+    with pytest.raises(ValueError, match="unknown rule"):
+        parse_rules("SCOPE101,NOPE")
+    with pytest.raises(ValueError, match="at least one"):
+        parse_rules(" , ")
+
+
+def test_custom_rule_registration_and_selection(no_body_runs):
+    @register_rule
+    class TooManyInstances(FamilyRule):
+        id = "TST901"
+        severity = "warning"
+        title = "family sweeps more than 2 instances"
+        fix_hint = "prune the space"
+
+        def check_family(self, ctx, fam):
+            if len(fam.bench.instances()) > 2:
+                yield self.finding(fam)
+    try:
+        r = reg()
+
+        def body(state):
+            n = state.params.n
+            while state.keep_running():
+                state.deliver(n)
+            state.set_items_processed(n)
+        b = register_benchmark("wide", body, scope="s", registry=r)
+        b.param_space(ParamSpace.product(n=[1, 2, 4]))
+        report = run_lint(r.all(), rules=["TST901"], compile_checks=False)
+        assert report.rules_run == ["TST901"]
+        assert rules_of(report) == ["TST901"]
+        assert report.findings[0].fix_hint == "prune the space"
+    finally:
+        RULES.pop("TST901")
+
+
+def test_crashing_rule_does_not_kill_the_pass(no_body_runs):
+    @register_rule
+    class Broken(FamilyRule):
+        id = "TST902"
+        severity = "error"
+        title = "always crashes"
+
+        def check_family(self, ctx, fam):
+            raise RuntimeError("boom")
+    try:
+        r = reg()
+
+        def body(state):
+            while state.keep_running():
+                pass
+        register_benchmark("buggy", body, scope="s", registry=r)
+        report = run_lint(r.all(), compile_checks=False)
+        assert "TST902" in report.rules_run
+        assert "SCOPE101" in rules_of(report)   # others still reported
+    finally:
+        RULES.pop("TST902")
+
+
+def test_report_gate_counts_and_json():
+    report = LintReport(findings=[], families_checked=3, scopes_checked=1,
+                        rules_run=["SCOPE101"])
+    assert not report.failed() and not report.failed(strict=True)
+    from repro.core.lint import Finding
+    warn = Finding(rule="W", severity="warning", scope="s", family="s/f",
+                   message="m")
+    err = Finding(rule="E", severity="error", scope="s", family="s/f",
+                  message="m", fix_hint="h", location="f.py:3")
+    report.findings.append(warn)
+    assert not report.failed() and report.failed(strict=True)
+    report.findings.append(err)
+    assert report.failed()
+    doc = report.to_json()
+    assert doc["version"] == 1 and doc["counts"] == \
+        {"error": 1, "warning": 1, "info": 0}
+    assert doc["findings"][1]["location"] == "f.py:3"
+    text = report.format_text()
+    assert text.index("E error") < text.index("W warning")
+    assert "fix: h" in text
+
+
+def test_findings_carry_registration_location(no_body_runs):
+    r = reg()
+
+    def body(state):
+        while state.keep_running():
+            pass
+    register_benchmark("located", body, scope="s", registry=r)
+    f = [f for f in lint(r).findings if f.rule == "SCOPE101"][0]
+    assert f.location.startswith(__file__.replace(".pyc", ".py"))
+
+
+# ---------------------------------------------------------------------------
+# the nine builtin scopes lint clean — without executing anything
+# ---------------------------------------------------------------------------
+
+def test_builtin_scopes_lint_clean(no_body_runs):
+    mgr = ScopeManager(registry=BenchmarkRegistry(), flags=FlagRegistry(),
+                       hooks=HookChain())
+    mgr.load(BUILTIN_SCOPES)
+    mgr.register_all()
+    benches = mgr.registry.all()
+    assert len(benches) >= 20
+    report = run_lint(benches, scope_names=sorted(mgr.status()),
+                      compile_checks=False)
+    assert report.scopes_checked == 9
+    assert not report.failed(strict=True), report.format_text()
+
+
+def test_linalg_scope_compile_tier_clean(no_body_runs):
+    """Full pass (AST + trace + registry) over one jax scope: fixtures
+    are built and lowered, bodies still never run."""
+    mgr = ScopeManager(registry=BenchmarkRegistry(), flags=FlagRegistry(),
+                       hooks=HookChain())
+    mgr.load(["repro.scopes.linalg_scope"])
+    mgr.register_all()
+    report = run_lint(mgr.registry.all(), compile_checks=True)
+    assert "SCOPE201" in report.rules_run
+    assert not report.failed(strict=True), report.format_text()
+    assert report.counts()["info"] == 0
+
+
+# ---------------------------------------------------------------------------
+# CLI end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def global_state():
+    """Snapshot/restore the process-global FLAGS/HOOKS/REGISTRY that
+    lint_main drives, so CLI tests don't leak into other tests."""
+    from repro.core.flags import FLAGS
+    from repro.core.hooks import HOOKS
+    from repro.core.registry import REGISTRY
+    specs, values = dict(FLAGS._specs), dict(FLAGS._values)
+    pre, post = list(HOOKS._pre_parse), list(HOOKS._post_parse)
+    benches = dict(REGISTRY._benchmarks)
+    yield
+    FLAGS._specs.clear(), FLAGS._specs.update(specs)
+    FLAGS._values.clear(), FLAGS._values.update(values)
+    HOOKS._pre_parse[:], HOOKS._post_parse[:] = pre, post
+    REGISTRY._benchmarks.clear(), REGISTRY._benchmarks.update(benches)
+
+
+def _fake_scope_module(name, register):
+    modname = f"fake_lint_scopes.{name}"
+    mod = types.ModuleType(modname)
+    mod.SCOPE = Scope(name=name, register=register)
+    sys.modules[modname] = mod
+    return modname
+
+
+def cli(args, modules, entry=None):
+    """One lint_main/main call against a pristine global registry (the
+    process-global REGISTRY would otherwise accumulate registrations
+    across calls and collide)."""
+    from repro.core.registry import REGISTRY
+    saved = dict(REGISTRY._benchmarks)
+    REGISTRY._benchmarks.clear()
+    try:
+        return (entry or lint_main)(args, modules)
+    finally:
+        REGISTRY._benchmarks.clear()
+        REGISTRY._benchmarks.update(saved)
+
+
+@pytest.fixture
+def buggy_scope(global_state):
+    def _register(registry):
+        def unfenced(state):
+            while state.keep_running():
+                pass
+            state.set_items_processed(1)
+        register_benchmark("unfenced", unfenced, scope="buggy",
+                           registry=registry)
+    name = _fake_scope_module("buggy", _register)
+    yield name
+    sys.modules.pop(name)
+
+
+@pytest.fixture
+def warn_scope(global_state):
+    def _register(registry):
+        def bare(state):
+            while state.keep_running():
+                state.deliver(1)
+        _quietly(register_benchmark("bare", bare, scope="warny",
+                                    registry=registry))
+    name = _fake_scope_module("warny", _register)
+    yield name
+    sys.modules.pop(name)
+
+
+@pytest.fixture
+def clean_scope(global_state):
+    def _register(registry):
+        def good(state):
+            while state.keep_running():
+                state.deliver(1)
+            state.set_items_processed(1)
+        _quietly(register_benchmark("good", good, scope="cleany",
+                                    registry=registry))
+    name = _fake_scope_module("cleany", _register)
+    yield name
+    sys.modules.pop(name)
+
+
+def test_cli_exit_codes(no_body_runs, capsys, buggy_scope, warn_scope,
+                        clean_scope):
+    # errors gate with and without --strict
+    assert cli(["--no-compile"], [buggy_scope]) == 1
+    out = capsys.readouterr().out
+    assert "SCOPE101" in out and "1 error(s)" in out
+    # warnings gate only under --strict
+    assert cli(["--no-compile"], [warn_scope]) == 0
+    capsys.readouterr()
+    assert cli(["--no-compile", "--strict"], [warn_scope]) == 1
+    assert "SCOPE104" in capsys.readouterr().out
+    # a clean scope passes even strict
+    assert cli(["--no-compile", "--strict"], [clean_scope]) == 0
+
+
+def test_cli_scope_and_family_selection(no_body_runs, capsys, buggy_scope,
+                                        clean_scope):
+    # --scope narrows to the clean scope: the buggy one never gates
+    assert cli(["--no-compile", "--scope", "cleany"],
+               [buggy_scope, clean_scope]) == 0
+    capsys.readouterr()
+    # --family regex selecting nothing is a usage error
+    assert cli(["--no-compile", "--family", "nope$"], [clean_scope]) == 2
+    # --family narrows within a scope (and doesn't make the unselected
+    # buggy scope look empty to SCOPE303)
+    assert cli(["--no-compile", "--strict", "--family", "cleany/good"],
+               [buggy_scope, clean_scope]) == 0
+
+
+def test_cli_json_contract(no_body_runs, capsys, buggy_scope):
+    assert cli(["--no-compile", "--format", "json"], [buggy_scope]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["version"] == 1 and doc["failed"] is True
+    assert doc["counts"]["error"] == 1
+    (finding,) = doc["findings"]
+    assert finding["rule"] == "SCOPE101"
+    assert finding["family"] == "buggy/unfenced"
+    assert finding["fix_hint"]
+
+
+def test_cli_rules_subset_and_list(no_body_runs, capsys, buggy_scope):
+    assert cli(["--no-compile", "--rules", "SCOPE104"],
+               [buggy_scope]) == 0          # 101 not selected
+    capsys.readouterr()
+    assert cli(["--rules", "BOGUS"], [buggy_scope]) == 2
+    assert cli(["--list-rules"], [buggy_scope]) == 0
+    out = capsys.readouterr().out
+    for rule_id in RULES:
+        assert rule_id in out
+
+
+def test_main_dispatches_lint_and_help(no_body_runs, capsys, clean_scope):
+    from repro.core.main import main
+    assert cli(["lint", "--no-compile"], [clean_scope], entry=main) == 0
+    capsys.readouterr()
+    assert cli(["lint", "--help"], [clean_scope], entry=main) == 0
+    out = capsys.readouterr().out
+    assert "--strict" in out and "python -m repro lint" in out
+
+
+def test_run_lint_preflight_aborts_before_running(no_body_runs, capsys,
+                                                  buggy_scope):
+    from repro.core.main import main
+    assert cli(["run", "--lint", "--results-dir", ""],
+               [buggy_scope], entry=main) == 1
+    err = capsys.readouterr().err
+    assert "SCOPE101" in err
+
+
+def test_analysis_handles_for_loop_and_nested_loops(no_body_runs):
+    r = reg()
+
+    def body(state):
+        for _ in state:
+            state.deliver(np.ones(4))
+        state.set_items_processed(4)
+    register_benchmark("forloop", body, scope="s", registry=r)
+    found = [f for f in lint(r).findings if f.rule == "SCOPE102"]
+    assert len(found) == 1           # np.ones inside `for _ in state`
+
+    b = r.get("s/forloop")
+    ana = FamilyAnalysis(b)
+    assert len(ana.timed_loops) == 1

@@ -154,7 +154,7 @@ def test_subprocess_distinguishes_error_from_crash(monkeypatch, tmp_path):
     (tmp_path / "faulty_scope.py").write_text(FAULTY)
     monkeypatch.syspath_prepend(str(tmp_path))
     _ensure_src_on_child_path(monkeypatch, extra=tmp_path)
-    mgr = make_mgr(["faulty_scope"])
+    make_mgr(["faulty_scope"])
     # registration failure only manifests in the worker (parent-side
     # register_all already marked it unavailable) — dispatch explicitly
     from repro.core.orchestrate import _run_subprocess

@@ -10,7 +10,7 @@ import time
 
 import pytest
 
-from repro.core.benchmark import (Benchmark, ParamSpace, Params, State,
+from repro.core.benchmark import (Benchmark, ParamSpace, Params,
                                   format_value, match_params, name_params,
                                   parse_param_filter)
 from repro.core.flags import FlagRegistry

@@ -59,7 +59,7 @@ def test_zero_shard_adds_data_axis_somewhere(arch):
     mesh = MESHES[0]
     structs = jax.eval_shape(api.init, jax.ShapeDtypeStruct((2,),
                                                             jnp.uint32))
-    tp = part.param_specs(cfg, structs, mesh)
+    part.param_specs(cfg, structs, mesh)
     zero = part.zero_shard_specs(cfg, structs, mesh)
     n_data = sum("data" in str(s) for s in jax.tree_util.tree_leaves(
         jax.tree_util.tree_map(str, zero)))

@@ -1,7 +1,6 @@
 """HLO analyzer: flops/collectives/trip counts on known programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.roofline.analysis import model_flops, roofline_terms
 from repro.roofline.hlo import analyze_hlo, cpu_widening_artifact_bytes

@@ -5,7 +5,7 @@ import pytest
 import yaml
 from hypothesis_compat import given, settings, st
 
-from repro.scopeplot import BenchmarkFile, Frame, cat, filter_name, loads
+from repro.scopeplot import BenchmarkFile, Frame, cat
 from repro.scopeplot.plot import (load_spec, quick_bar, render_spec,
                                   spec_dependencies)
 
@@ -95,15 +95,15 @@ def test_spec_render_and_deps(tmp_path):
     sp.write_text(yaml.safe_dump(spec))
     loaded = load_spec(str(sp))
     assert spec_dependencies(loaded) == [str(src)]
-    out = render_spec(loaded)
+    render_spec(loaded)
     assert (tmp_path / "out.png").exists()
 
 
 def test_bar_subcommand(tmp_path):
     src = tmp_path / "r.json"
     src.write_text(json.dumps(DOC))
-    out = quick_bar(str(src), "n", "real_time",
-                    output=str(tmp_path / "bar.png"))
+    quick_bar(str(src), "n", "real_time",
+              output=str(tmp_path / "bar.png"))
     assert (tmp_path / "bar.png").exists()
 
 

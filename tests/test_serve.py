@@ -5,8 +5,7 @@ import numpy as np
 import pytest
 
 from repro.models import build, get_config
-from repro.models import transformer
-from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve import ServeConfig, ServeEngine
 
 
 @pytest.fixture(scope="module")
@@ -37,7 +36,7 @@ def test_engine_matches_reference_single(small):
     ref = greedy_reference(cfg, api, params, prompt, 6)
     eng = ServeEngine(api, params, ServeConfig(max_batch=2, max_len=256,
                                                prompt_buckets=(16,)))
-    req = eng.submit(prompt, max_tokens=6)
+    eng.submit(prompt, max_tokens=6)
     done = eng.run()
     assert len(done) == 1
     assert done[0].output == ref

@@ -1,7 +1,4 @@
 """End-to-end training behaviour: loss decreases; resume is exact."""
-import jax
-import numpy as np
-
 from repro.launch.train import train
 
 
@@ -15,7 +12,6 @@ def test_loss_decreases():
 def test_checkpoint_resume_exact(tmp_path):
     """Interrupted+resumed run ends at the same loss as uninterrupted —
     data pipeline resumability + checkpoint fidelity together."""
-    d1 = str(tmp_path / "a")
     full = train("llama3.2-1b", steps=14, global_batch=2, seq_len=32,
                  lr=1e-3, ckpt_dir=None, log_every=100, seed=5)
     d2 = str(tmp_path / "b")
