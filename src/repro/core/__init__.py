@@ -20,7 +20,7 @@ Public API surface for scope authors::
     SCOPE = Scope(name="myscope", register=_register)
 """
 from .benchmark import (Benchmark, ParamSpace, Params, State, SkipError,
-                        match_params, parse_param_filter)
+                        Tunable, match_params, parse_param_filter)
 from .errorcheck import (ScopeError, check_compiles, check_finite,
                          check_shape, check_sharding, checked, sync)
 from .flags import FLAGS, FlagRegistry
@@ -37,11 +37,13 @@ from .registry import (REGISTRY, BenchmarkRegistry, benchmark,
 from .runner import (RunOptions, run_benchmarks, run_single_instance,
                      write_json)
 from .scope import BUILTIN_SCOPES, Scope, ScopeManager
+from .search import (STRATEGIES, SearchResult, Trial, TrialError,
+                     pareto_front, run_search)
 from .sysinfo import TPU_V5E, build_context
 
 __all__ = [
     "Benchmark", "ParamSpace", "Params", "State", "SkipError",
-    "match_params", "parse_param_filter",
+    "Tunable", "match_params", "parse_param_filter",
     "ScopeError", "check_compiles", "check_finite", "check_shape",
     "check_sharding", "checked", "sync",
     "FLAGS", "FlagRegistry", "HOOKS", "HookChain", "get_logger",
@@ -54,5 +56,7 @@ __all__ = [
     "InstanceResult", "OrchestratorOptions", "RunResult", "ScopeShard",
     "execute", "merge_shards", "Comparison", "compare_documents",
     "save_baseline",
+    "STRATEGIES", "SearchResult", "Trial", "TrialError", "pareto_front",
+    "run_search",
     "TPU_V5E", "build_context",
 ]

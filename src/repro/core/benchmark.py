@@ -427,6 +427,27 @@ def _capture_source(fn: Any) -> Tuple[Optional[str], str, int]:
     return source, file, line
 
 
+@dataclass(frozen=True)
+class Tunable:
+    """A family's tunable-kernel declaration (``python -m repro tune``).
+
+    ``kernel`` names the :mod:`repro.kernels.tuning` artifact the search
+    writes; ``space`` is the knob space searched (axes must be that
+    kernel's knobs); ``instance`` is a parameter filter (axis →
+    formatted value) selecting which point of the family's sweep each
+    trial drives.  The core stays kernel-agnostic — knob validity is
+    checked by the tune CLI against the tuning registry.
+    """
+
+    kernel: str
+    space: ParamSpace
+    instance: Tuple[Tuple[str, str], ...] = ()
+
+    def instance_filter(self) -> Optional[Dict[str, List[str]]]:
+        """The declaration's filter in ``--param`` shape (None if empty)."""
+        return {k: [v] for k, v in self.instance} or None
+
+
 @dataclass
 class Benchmark:
     """A registered benchmark family (body + parameter space + metadata).
@@ -454,6 +475,10 @@ class Benchmark:
     # Meter instances) taking precedence over RunOptions.meters
     sync_fn: Optional[Callable[[Any], Any]] = None
     meters: Optional[List[Any]] = None
+    # tunable-kernel declaration (python -m repro tune): which
+    # repro.kernels.tuning artifact this family's measurements feed,
+    # the knob space to search, and the instance point to drive
+    tunable: Optional[Tunable] = None
     labels: Dict[str, str] = field(default_factory=dict)
     doc: str = ""
     # source captured at registration time for the static-analysis pass
@@ -513,6 +538,29 @@ class Benchmark:
             if isinstance(m, str):
                 validate_meter_name(m)
         self.meters = list(meters)
+        return self
+
+    def set_tunable(self, kernel: str, space: Optional[ParamSpace] = None,
+                    instance: Optional[Dict[str, Any]] = None,
+                    **axes: Sequence[Any]) -> "Benchmark":
+        """Declare the tunable kernel this family measures::
+
+            matmul.set_tunable("matmul", bm=[128, 256], bn=[128, 256],
+                               bk=[128, 256],
+                               instance={"backend": "pallas"})
+
+        ``python -m repro tune <family>`` searches the knob space, runs
+        this family's ``instance`` point per trial, and ships the winner
+        as the kernel's tuned.json default."""
+        if space is not None and axes:
+            raise ValueError("pass a ParamSpace or keyword axes, not both")
+        space = space if space is not None else ParamSpace.product(**axes)
+        if not len(space):
+            raise ValueError(
+                f"benchmark {self.name!r}: tunable knob space is empty")
+        inst = tuple(sorted((k, format_value(v))
+                            for k, v in (instance or {}).items()))
+        self.tunable = Tunable(kernel=kernel, space=space, instance=inst)
         return self
 
     # -- GB-style fluent sweep builders -----------------------------------

@@ -47,6 +47,22 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
         ("plan only one backend's instances of the typed spaces",
          "python -m repro plan --param backend=pallas"),
     ],
+    "tune": [
+        ("screen + hill-climb the matmul block space under a 16-trial "
+         "budget; the winner ships as the kernel's tuned.json default",
+         "python -m repro tune mxu/matmul --budget 16 --seed 0"),
+        ("spend the budget on configs a prior tune run measured cheapest",
+         "python -m repro tune mxu/matmul --budget 8 "
+         "--costs results/20260731T120000-42"),
+        ("maximize the cost-model FLOP rate instead of minimizing wall "
+         "time",
+         "python -m repro tune mxu/matmul --objective flops_per_second "
+         "--budget 12"),
+        ("screening only: rank the axes by sensitivity without refining",
+         "python -m repro tune nn/rmsnorm --strategy screening"),
+        ("list every family that declares a tunable kernel space",
+         "python -m repro tune --list"),
+    ],
     "compare": [
         ("mean/stddev-aware diff of two runs (exit 1 on regression)",
          "python -m repro compare results/baseline.json "

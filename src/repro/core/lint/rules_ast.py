@@ -7,10 +7,12 @@ and one clean family per rule.
 """
 from __future__ import annotations
 
+import ast
 from typing import Iterable
 
 from .framework import FamilyContext, FamilyRule, Finding, LintContext, \
     register_rule
+from .analysis import dotted_name
 
 #: Array-constructor / compile entry points that belong in a fixture —
 #: inside the timed loop they bill allocation/trace/compile time to the
@@ -198,3 +200,70 @@ class ManualTimeNeverReported(FamilyRule):
             return
         if not fam.analysis.calls_state_method("set_iteration_time"):
             yield self.finding(fam)
+
+
+#: Tunable-kernel entry points and their block-size knobs.  Call sites
+#: that pin these to literal ints opt out of the searched defaults that
+#: ``python -m repro tune`` ships (repro.kernels.tuning), so a refreshed
+#: tuned.json never reaches them.  Keyed by the *last* dotted component
+#: so aliased imports still match.
+TUNED_KERNEL_KNOBS = {
+    "matmul": ("bm", "bn", "bk"),
+    "matmul_pallas": ("bm", "bn", "bk"),
+    "pallas_matmul": ("bm", "bn", "bk"),
+    "flash_attention": ("bq", "bk"),
+    "flash_attention_pallas": ("bq", "bk"),
+    "rmsnorm": ("br",),
+    "rmsnorm_pallas": ("br",),
+    "ssd": ("chunk",),
+    "ssd_chunk_pallas": ("chunk",),
+}
+
+
+@register_rule
+class HardcodedKernelBlocks(FamilyRule):
+    """Kernel call site pins a block-size knob to a literal int."""
+
+    id = "SCOPE107"
+    severity = "warning"
+    title = ""
+    fix_hint = ("drop the literal so the call picks up the tuned "
+                "defaults (repro.kernels.tuning: tuned.json, "
+                "REPRO_TUNED_* env, builtin); refresh them with "
+                "`python -m repro tune <family>`")
+
+    def _funcs(self, fam: FamilyContext):
+        ana = fam.analysis
+        for func in (ana.body, ana.fixture):
+            if func is not None:
+                yield func
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        if not fam.analysis.analyzable():
+            return
+        for func in self._funcs(fam):
+            for node in ast.walk(func):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                leaf = name.rsplit(".", 1)[-1]
+                knobs = TUNED_KERNEL_KNOBS.get(leaf)
+                if knobs is None:
+                    continue
+                for kw in node.keywords:
+                    if kw.arg not in knobs:
+                        continue
+                    val = kw.value
+                    if isinstance(val, ast.Constant) \
+                            and type(val.value) is int:
+                        yield self.finding(
+                            fam,
+                            message=(
+                                f"{name}(..., {kw.arg}={val.value}) "
+                                f"hardcodes a block size (line "
+                                f"{kw.value.lineno}): literal knobs "
+                                f"shadow the tuned defaults shipped by "
+                                f"`python -m repro tune`"))

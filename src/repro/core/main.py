@@ -4,6 +4,7 @@ Subcommands::
 
     python -m repro [run] [flags...]       # run benchmarks (default)
     python -m repro plan [flags...]        # print the work plan + costs
+    python -m repro tune <family> [...]    # autotune a kernel's blocks
     python -m repro compare A.json B.json  # diff two result documents
     python -m repro report <run-id>        # HTML/Markdown run report
 
@@ -62,6 +63,8 @@ commands:
   plan      print the work plan with predicted costs and worker bins
   lint      static-analyze benchmark families for measurement-corrupting
             bugs (nothing runs, nothing is timed)
+  tune      search a tunable family's kernel block space and ship the
+            winner as the kernel's tuned.json default
   compare   mean/stddev-aware diff of two result documents
   report    static HTML/Markdown report for a run or the run history
 
@@ -87,6 +90,9 @@ def main(argv: Optional[List[str]] = None,
     if argv and argv[0] == "lint":
         from .lint import lint_main
         return lint_main(argv[1:], scope_modules)
+    if argv and argv[0] == "tune":
+        from .tune import tune_main
+        return tune_main(argv[1:], scope_modules)
     if argv and argv[0] == "run":
         argv = argv[1:]
     return run_main(argv, scope_modules)

@@ -1,11 +1,32 @@
+"""Public wrapper for the RMSNorm kernel.
+
+``br`` (rows per grid step) resolves through :mod:`repro.kernels.tuning`
+outside the jit boundary (kwarg > env > tuned.json > builtin).
+"""
 import functools
+from typing import Optional
 
 import jax
+
+from repro.kernels import tuning
 
 from .kernel import rmsnorm_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "br"))
-def rmsnorm(x, scale, *, eps: float = 1e-6, br: int = 256):
+def _rmsnorm(x, scale, eps: float, br: int):
     return rmsnorm_pallas(x, scale, eps=eps, br=br,
                           interpret=jax.default_backend() != "tpu")
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, br: Optional[int] = None):
+    """Row-blocked RMSNorm; ``br`` defaults to the tuned block size."""
+    cfg = tuning.resolve("rmsnorm", br=br)
+    n, d = x.shape
+    eff = {"br": min(cfg["br"], n)}
+    # x block + fp32 working copy + output block + the scale row;
+    # x2 for the pipeline's double buffer
+    vmem = 2 * (eff["br"] * d * (2 * x.dtype.itemsize + 4)
+                + d * scale.dtype.itemsize)
+    tuning.validate_blocks("rmsnorm", eff, dims={"br": n}, vmem_bytes=vmem)
+    return _rmsnorm(x, scale, eps, eff["br"])

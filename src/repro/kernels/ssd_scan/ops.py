@@ -1,20 +1,22 @@
-"""SSD via the Pallas chunk kernel + XLA inter-chunk recurrence."""
+"""SSD via the Pallas chunk kernel + XLA inter-chunk recurrence.
+
+``chunk`` resolves through :mod:`repro.kernels.tuning` outside the jit
+boundary (kwarg > env > tuned.json > builtin).
+"""
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import tuning
+
 from .kernel import ssd_chunk_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
-def ssd(x, dt, A, B, C, D, *, chunk: int = 128, init_state=None):
-    """Same contract as repro.models.layers.ssd_chunked (g=1 folded).
-
-    x [b,l,h,p]; dt [b,l,h]; A [h]; B,C [b,l,g,n]; D [h].
-    Returns (y [b,l,h,p], final_state [b,h,p,n]).
-    """
+def _ssd(x, dt, A, B, C, D, chunk: int, init_state=None):
     b, l, h, p = x.shape
     interpret = jax.default_backend() != "tpu"
     y_intra, states, ecs = ssd_chunk_pallas(
@@ -41,3 +43,25 @@ def ssd(x, dt, A, B, C, D, *, chunk: int = 128, init_state=None):
     y = y_intra.astype(jnp.float32) + y_inter.reshape(b, l, h, p)
     y = y + x.astype(jnp.float32) * D[None, None, :, None]
     return y.astype(x.dtype), hfin
+
+
+def ssd(x, dt, A, B, C, D, *, chunk: Optional[int] = None,
+        init_state=None):
+    """Same contract as repro.models.layers.ssd_chunked (g=1 folded).
+
+    x [b,l,h,p]; dt [b,l,h]; A [h]; B,C [b,l,g,n]; D [h].
+    Returns (y [b,l,h,p], final_state [b,h,p,n]).  ``chunk`` defaults to
+    the tuned intra-chunk length.
+    """
+    cfg = tuning.resolve("ssd_scan", chunk=chunk)
+    _, l, _, p = x.shape
+    n = B.shape[-1]
+    eff = {"chunk": min(cfg["chunk"], l)}
+    Q = eff["chunk"]
+    # per grid step: x/y chunks, B/C chunks, dt + cumsum rows, the state
+    # tile and the three Q x Q decay matrices (all fp32 in-kernel);
+    # x2 for the pipeline's double buffer
+    vmem = 2 * 4 * (2 * Q * p + 2 * Q * n + 2 * Q + p * n + 3 * Q * Q)
+    tuning.validate_blocks("ssd_scan", eff, dims={"chunk": l},
+                           vmem_bytes=vmem)
+    return _ssd(x, dt, A, B, C, D, eff["chunk"], init_state=init_state)

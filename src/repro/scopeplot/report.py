@@ -494,6 +494,164 @@ def generate_run_report(run_dir: str, history_file: Optional[str] = None,
     return {"md": md, "html": html_path}
 
 
+def _tune_speedup_plot(summary: Dict[str, Any], specs_dir: str,
+                       data_dir: str, out_dir: str
+                       ) -> List[Tuple[str, str]]:
+    """Before/after speedup bars for a tune run: every successful trial
+    config (plus a ``<kernel> (best)`` bar) against the builtin-default
+    baseline, rendered through the normal ``speedup`` spec pipeline."""
+    baseline = summary.get("baseline") or {}
+    base_time = (baseline.get("metrics") or {}).get("real_time_s")
+    trials = (summary.get("search") or {}).get("trials", [])
+    best = summary.get("best") or {}
+    if not base_time or not trials:
+        return []
+    kernel = summary.get("kernel", "kernel")
+
+    def rec(name: str, seconds: float) -> Dict[str, Any]:
+        return {"name": name, "run_name": name, "run_type": "iteration",
+                "iterations": 1, "real_time": seconds,
+                "cpu_time": seconds, "time_unit": "s"}
+
+    names: List[Tuple[str, float]] = []
+    for t in trials:
+        secs = (t.get("metrics") or {}).get("real_time_s")
+        if t.get("error") or not secs:
+            continue
+        label = "/".join(f"{k}:{v}" for k, v in t["params"].items())
+        names.append((label, secs))
+    best_time = (best.get("metrics") or {}).get("real_time_s")
+    if best_time:
+        names.append((f"{kernel} (best)", best_time))
+    if not names:
+        return []
+    before = {"context": {}, "benchmarks": [rec(n, base_time)
+                                            for n, _ in names]}
+    after = {"context": {}, "benchmarks": [rec(n, s) for n, s in names]}
+    before_path = os.path.join(data_dir, "tune_before.json")
+    after_path = os.path.join(data_dir, "tune_after.json")
+    for path, doc in ((before_path, before), (after_path, after)):
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2)
+    out = _emit_spec(specs_dir, "tune_speedup", {
+        "title": f"{kernel} — speedup vs builtin-default blocks",
+        "type": "speedup",
+        "output": "../tune_speedup.png",
+        "x_axis": {"label": "speedup (builtin default / config)"},
+        "baseline": {"input_file": _rel(before_path, specs_dir)},
+        "series": [{"label": "tuned",
+                    "input_file": _rel(after_path, specs_dir)}],
+    })
+    return [(f"{kernel}: per-config speedup vs the builtin default",
+             _rel(out, out_dir))]
+
+
+def generate_tune_report(run_dir: str, out_dir: Optional[str] = None,
+                         title: Optional[str] = None) -> Dict[str, str]:
+    """Render a ``python -m repro tune`` run's report from its
+    ``tune.json`` summary: before/after speedup bars per kernel and the
+    factorial-screening sensitivity table.  Byte-identical when
+    regenerated from the same run directory."""
+    run_dir = os.path.abspath(run_dir)
+    tune_path = os.path.join(run_dir, "tune.json")
+    with open(tune_path) as f:
+        summary = json.load(f)
+    out_dir = os.path.abspath(out_dir or os.path.join(run_dir, "report"))
+    specs_dir = os.path.join(out_dir, "specs")
+    data_dir = os.path.join(out_dir, "data")
+    os.makedirs(specs_dir, exist_ok=True)
+    os.makedirs(data_dir, exist_ok=True)
+
+    search = summary.get("search") or {}
+    objective = summary.get("objective", "real_time_s")
+    trials = search.get("trials", [])
+    kernel = summary.get("kernel", "?")
+    best = summary.get("best") or {}
+    baseline = summary.get("baseline") or {}
+
+    def fmt_cfg(cfg: Optional[Dict[str, Any]]) -> str:
+        return ", ".join(f"{k}={v}" for k, v in (cfg or {}).items()) or "-"
+
+    def fmt_obj(metrics: Optional[Dict[str, Any]]) -> str:
+        v = (metrics or {}).get(objective)
+        if v is None:
+            return "-"
+        return _fmt_time(v) if objective.endswith("_s") else f"{v:.4g}"
+
+    overview = Section("Search")
+    speedup = summary.get("speedup")
+    overview.table(["key", "value"], [
+        ["family", str(summary.get("family", "?"))],
+        ["instance", str(summary.get("instance", "?"))],
+        ["kernel", kernel],
+        ["objective", objective],
+        ["strategy", str(search.get("strategy", "?"))],
+        ["trials", f"{len(trials)} of budget {search.get('budget', '?')}"
+                   + (" (budget exhausted)" if search.get("exhausted")
+                      else "")],
+        ["seed", str(search.get("seed", "?"))],
+        ["best config", fmt_cfg(best.get("params"))],
+        ["best " + objective, fmt_obj(best.get("metrics"))],
+        ["baseline config", fmt_cfg(baseline.get("params"))],
+        ["baseline " + objective, fmt_obj(baseline.get("metrics"))],
+        ["speedup", f"{speedup:.2f}x" if speedup else "-"],
+    ])
+    sections = [overview]
+
+    sens = Section("Axis sensitivity (factorial screening)")
+    ranking = search.get("sensitivity", [])
+    if ranking:
+        sens.text("Objective span when one axis moves across its "
+                  "extremes with the others held at the space's center "
+                  "— larger span = more sensitive axis.")
+        sens.table(["rank", "axis", f"{objective} span"],
+                   [[str(i + 1), r["axis"], f"{r['span']:.4g}"]
+                    for i, r in enumerate(ranking)])
+    else:
+        sens.text("No screening pass in this run "
+                  "(--strategy hillclimb skips it).")
+    sections.append(sens)
+
+    frontier = set(search.get("frontier", []))
+    tr = Section("Trials")
+    rows = []
+    for t in trials:
+        rows.append([
+            str(t["index"]), t.get("phase", "?"),
+            fmt_cfg(t.get("params")),
+            fmt_obj(t.get("metrics")),
+            "yes" if t["index"] in frontier else "",
+            t.get("error", ""),
+        ])
+    tr.table(["#", "phase", "config", objective, "pareto", "error"], rows)
+    sections.append(tr)
+
+    plots = Section("Speedup")
+    images = _tune_speedup_plot(summary, specs_dir, data_dir, out_dir)
+    if images:
+        for caption, rel in images:
+            plots.image(caption, rel)
+    else:
+        plots.text("No baseline measurement — speedup bars need the "
+                   "builtin-default config to have been measured.")
+    sections.append(plots)
+
+    title = title or (f"SCOPE tune report — {kernel} "
+                      f"(run {summary.get('run_id', '?')})")
+    meta = [
+        ("run", f"`{summary.get('run_id', '?')}`"),
+        ("kernel", kernel),
+        ("family", str(summary.get("family", "?"))),
+        ("trials", str(len(trials))),
+    ]
+    md = os.path.join(out_dir, "report.md")
+    html_path = os.path.join(out_dir, "index.html")
+    _write_markdown(md, title, meta, sections)
+    _write_html(html_path, title, meta, sections)
+    log.info("tune report: wrote %s and %s", md, html_path)
+    return {"md": md, "html": html_path}
+
+
 def generate_history_report(history_file: str,
                             out_dir: Optional[str] = None,
                             window: int = DEFAULT_WINDOW,
@@ -610,8 +768,15 @@ def report_main(argv: Optional[List[str]] = None) -> int:
                 print(f"error: no run directory {run_dir}{hint}",
                       file=sys.stderr)
                 return 2
-            paths = generate_run_report(run_dir, out_dir=ns.output,
-                                        window=ns.window, title=ns.title)
+            if os.path.exists(os.path.join(run_dir, "tune.json")):
+                # an autotuning run: its summary drives a dedicated
+                # speedup/sensitivity page instead of the scope report
+                paths = generate_tune_report(run_dir, out_dir=ns.output,
+                                             title=ns.title)
+            else:
+                paths = generate_run_report(run_dir, out_dir=ns.output,
+                                            window=ns.window,
+                                            title=ns.title)
     except (OSError, json.JSONDecodeError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 1

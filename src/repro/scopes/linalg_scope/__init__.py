@@ -34,6 +34,31 @@ def _register(registry: BenchmarkRegistry) -> None:
         ParamSpace.product(dtype=["f32", "bf16"], b=[8], n=[128, 256]))
     batched_matmul.set_fixture(batched_matmul_setup)
 
+    def matmul_rect_setup(params):
+        from repro.kernels.matmul import matmul as pallas_matmul
+        x = jnp.ones((params.m, params.k), jnp.float32)
+        y = jnp.ones((params.k, params.n), jnp.float32)
+        # blocks come from the tuned defaults (repro.kernels.tuning)
+        return (lambda x, y: pallas_matmul(x, y)), x, y
+
+    @benchmark(scope=NAME, registry=registry)
+    def matmul_rect(state: State):
+        """Rectangular matmul through the tiled Pallas kernel (interpret
+        mode on CPU) — the non-square shape the MXU scope's square
+        sweep never exercises."""
+        fn, x, y = state.fixture
+        while state.keep_running():
+            state.deliver(fn(x, y))
+        p = state.params
+        state.counters["flops"] = 2.0 * p.m * p.n * p.k
+    matmul_rect.param_space(m=[512], n=[256], k=[256])
+    matmul_rect.set_fixture(matmul_rect_setup)
+    # every block divides the m=512/n=256/k=256 instance's dims after
+    # shape clamping; tuning this family refreshes the shared matmul
+    # artifact from a rectangular workload
+    matmul_rect.set_tunable("matmul", bm=[64, 128, 256, 512],
+                            bn=[64, 128, 256], bk=[64, 128, 256])
+
     def cholesky_setup(params):
         return (jax.jit(jnp.linalg.cholesky),
                 jnp.eye(params.n) * 4.0 + 0.1)

@@ -32,8 +32,9 @@ def _register(registry: BenchmarkRegistry) -> None:
             fn = jax.jit(jnp.dot)
         else:
             from repro.kernels.matmul import matmul as pallas_matmul
-            bm = min(256, n)
-            fn = lambda x, y: pallas_matmul(x, y, bm=bm, bn=bm, bk=bm)  # noqa: E731
+            # block sizes come from the tuned defaults
+            # (repro.kernels.tuning: tuned.json, env, or builtin)
+            fn = lambda x, y: pallas_matmul(x, y)  # noqa: E731
         x = jnp.ones((n, n), dtype)
         y = jnp.ones((n, n), dtype)
         return fn, x, y
@@ -64,6 +65,11 @@ def _register(registry: BenchmarkRegistry) -> None:
         .where(lambda p: p.backend == "xla"
                or (p.dtype == "f32" and p.n == 256)))
     matmul.set_fixture(setup)
+    # `python -m repro tune mxu/matmul` searches the Pallas block space
+    # on the pallas instance and ships the winner as the kernel default
+    matmul.set_tunable("matmul", bm=[64, 128, 256], bn=[64, 128, 256],
+                       bk=[64, 128, 256],
+                       instance={"backend": "pallas"})
 
 
 SCOPE = Scope(name=NAME, version="2.0.0",

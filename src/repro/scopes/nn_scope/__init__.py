@@ -70,7 +70,9 @@ def _register(registry: BenchmarkRegistry) -> None:
             p = {"scale": s}
             return jax.jit(lambda x: L.rms_norm(p, x)), x
         from repro.kernels.rmsnorm import rmsnorm
-        return (lambda x: rmsnorm(x, s, br=128)), x
+        # row-block size comes from the tuned defaults
+        # (repro.kernels.tuning: tuned.json, env, or builtin)
+        return (lambda x: rmsnorm(x, s)), x
 
     @benchmark(scope=NAME, registry=registry)
     def rmsnorm(state: State):
@@ -84,6 +86,65 @@ def _register(registry: BenchmarkRegistry) -> None:
         ParamSpace.product(backend=["xla"], rows=[4096], d=[1024, 4096])
         + ParamSpace.cases({"backend": "pallas", "rows": 1024, "d": 1024}))
     rmsnorm.set_fixture(rmsnorm_setup)
+    # every br divides the pallas instance's rows=1024
+    rmsnorm.set_tunable("rmsnorm", br=[64, 128, 256, 512, 1024],
+                        instance={"backend": "pallas"})
+
+    def flash_pallas_setup(params):
+        from repro.kernels.flash_attention import flash_attention
+        # bq/bk come from the tuned defaults (repro.kernels.tuning).
+        # Shape is deliberately small (B=2, H=2, K=1, D=32): interpret
+        # mode executes the kernel body in Python, and the full
+        # _attn_operands shape takes minutes per call on CPU.
+        fn = lambda q, k, v: flash_attention(q, k, v, causal=True)  # noqa: E731
+        S = params.seq
+        q = jnp.ones((2, S, 2, 32), jnp.float32)
+        k = jnp.ones((2, S, 1, 32), jnp.float32)
+        v = jnp.ones((2, S, 1, 32), jnp.float32)
+        return fn, q, k, v
+
+    @benchmark(scope=NAME, registry=registry)
+    def flash_attention_pallas(state: State):
+        """Causal flash attention through the Pallas kernel (interpret
+        mode on CPU; tuned bq/bk blocks)."""
+        fn, q, k, v = state.fixture
+        while state.keep_running():
+            state.deliver(fn(q, k, v))
+        S = state.params.seq
+        state.counters["attn_flops"] = 4.0 * 2 * 2 * S * S * 32 / 2
+    flash_attention_pallas.param_space(seq=[128])
+    flash_attention_pallas.set_fixture(flash_pallas_setup)
+    # every bq/bk divides the seq=128 instance's sequence length
+    flash_attention_pallas.set_tunable("flash_attention",
+                                       bq=[32, 64, 128],
+                                       bk=[32, 64, 128])
+
+    def ssd_pallas_setup(params):
+        from repro.kernels.ssd_scan import ssd
+        S = params.seq
+        b, h, p_, n = 2, 4, 64, 64
+        x = jnp.ones((b, S, h, p_), jnp.float32) * 0.1
+        dt = jnp.ones((b, S, h), jnp.float32) * 0.1
+        A = -jnp.ones((h,), jnp.float32)
+        Bm = jnp.ones((b, S, 1, n), jnp.float32) * 0.1
+        Cm = jnp.ones((b, S, 1, n), jnp.float32) * 0.1
+        D = jnp.ones((h,), jnp.float32)
+        # chunk comes from the tuned defaults (repro.kernels.tuning)
+        fn = lambda *a: ssd(*a)[0]  # noqa: E731
+        return fn, x, dt, A, Bm, Cm, D
+
+    @benchmark(scope=NAME, registry=registry)
+    def ssd_scan_pallas(state: State):
+        """Mamba2 SSD scan through the Pallas chunk kernel (interpret
+        mode on CPU; tuned chunk length)."""
+        fn, *operands = state.fixture
+        while state.keep_running():
+            state.deliver(fn(*operands))
+        state.set_items_processed(2 * state.params.seq)
+    ssd_scan_pallas.param_space(seq=[512])
+    ssd_scan_pallas.set_fixture(ssd_pallas_setup)
+    # every chunk divides the seq=512 instance's sequence length
+    ssd_scan_pallas.set_tunable("ssd_scan", chunk=[64, 128, 256, 512])
 
     def moe_setup(params):
         E, k, d, ff = 8, 2, 256, 512

@@ -51,8 +51,10 @@ def _parsers():
     from repro.core.baseline import build_compare_parser
     from repro.core.lint import build_lint_parser
     from repro.core.main import build_plan_parser, build_run_parser
+    from repro.core.tune import build_tune_parser
     from repro.scopeplot.report import build_report_parser
     return {"run": build_run_parser(), "plan": build_plan_parser(),
+            "tune": build_tune_parser(),
             "lint": build_lint_parser(),
             "compare": build_compare_parser(),
             "report": build_report_parser()}
@@ -60,7 +62,8 @@ def _parsers():
 
 def test_examples_cover_every_subcommand():
     from repro.core.cli_examples import EXAMPLES
-    assert set(EXAMPLES) == {"run", "plan", "lint", "compare", "report"}
+    assert set(EXAMPLES) == {"run", "plan", "tune", "lint", "compare",
+                            "report"}
     assert all(EXAMPLES[k] for k in EXAMPLES)
 
 
@@ -96,7 +99,7 @@ def test_top_level_help(capsys):
     from repro.core.main import main
     assert main(["--help"]) == 0
     out = capsys.readouterr().out
-    for cmd in ("run", "plan", "lint", "compare", "report"):
+    for cmd in ("run", "plan", "tune", "lint", "compare", "report"):
         assert cmd in out
     assert "examples:" in out
 

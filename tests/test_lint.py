@@ -303,6 +303,56 @@ def test_scope106_triggers_when_time_is_never_reported(no_body_runs):
 
 
 # ---------------------------------------------------------------------------
+# SCOPE107 — hardcoded kernel block sizes bypass the tuned defaults
+# ---------------------------------------------------------------------------
+
+def test_scope107_triggers_on_literal_block_knob(no_body_runs):
+    r = reg()
+
+    def setup(params):
+        from repro.kernels.matmul import matmul
+        x = jnp.ones((params.n, params.n))
+        return (lambda x: matmul(x, x, bm=128, bk=64)), x
+
+    def body(state):
+        fn, x = state.fixture
+        while state.keep_running():
+            state.deliver(fn(x))
+        state.set_items_processed(1)
+    b = register_benchmark("pinned_blocks", body, scope="s", registry=r)
+    b.param_space(n=[256]).set_fixture(setup)
+    found = [f for f in lint(r).findings if f.rule == "SCOPE107"]
+    assert len(found) == 2 and found[0].severity == "warning"
+    assert "bm=128" in found[0].message
+    assert "tune" in found[0].message
+
+
+def histogram_like(x, *, chunk):
+    return (x, chunk)
+
+
+def test_scope107_clean_when_blocks_come_from_tuning(no_body_runs):
+    r = reg()
+
+    def setup(params):
+        from repro.kernels.matmul import matmul
+        x = jnp.ones((params.n, params.n))
+        # no literal knobs: the tuned defaults apply; non-knob kwargs
+        # and non-kernel calls with a `chunk=` kwarg stay exempt
+        unrelated = histogram_like(x, chunk=4096)
+        return (lambda x: matmul(x, x)), x, unrelated
+
+    def body(state):
+        fn, x, _ = state.fixture
+        while state.keep_running():
+            state.deliver(fn(x))
+        state.set_items_processed(1)
+    b = register_benchmark("tuned_blocks", body, scope="s", registry=r)
+    b.param_space(n=[256]).set_fixture(setup)
+    assert [f for f in lint(r).findings if f.rule == "SCOPE107"] == []
+
+
+# ---------------------------------------------------------------------------
 # SCOPE201 — workload optimized away (the DoNotOptimize class of bugs)
 # ---------------------------------------------------------------------------
 
