@@ -23,7 +23,11 @@ axes**, not tuples of ints.
     (``state.deliver(out)``): the body hands its outputs to the state
     so the measurement layer (repro.core.measure) can fence async
     dispatch *before the clock stops* — a body no longer blocks the
-    device every iteration just to be measurable.
+    device every iteration just to be measurable.  Per-*sample*
+    measurements (one request's latency, one step's queue depth) flow
+    through ``state.observe(sample)`` to meters implementing the
+    observe channel, and ``state.now()`` is the sanctioned timestamp
+    source for bodies that pace open-loop load.
   * ``Benchmark`` — a registered family: a body plus either a typed
     ``ParamSpace`` or a legacy int-tuple sweep (``args`` / ``ranges``,
     mirroring GB's ``->Args()``/``->Ranges()``), an optional *fixture*
@@ -298,6 +302,10 @@ class State:
         # stop timestamp is captured, so async dispatch is inside the
         # timed window (repro.core.measure.WallClockMeter)
         self._sync: Optional[Callable[["State"], Any]] = None
+        # per-sample observer installed by the meter stack: state.observe
+        # routes per-request samples (TTFT, latency, queue depth) to the
+        # meters' observe channel (repro.core.measure.Meter.observe)
+        self._observer: Optional[Callable[["State", Mapping], None]] = None
         # manual timing
         self._timing = False
         self._t_start = 0.0
@@ -373,6 +381,20 @@ class State:
     def manual_elapsed(self) -> float:
         return self._paused_elapsed
 
+    @staticmethod
+    def now() -> float:
+        """Sanctioned monotonic timestamp for bodies that *schedule* work.
+
+        Benchmark bodies must not read host clocks to time themselves
+        (the meter stack owns timing; repro lint SCOPE105 enforces it) —
+        but an open-loop load generator legitimately needs the current
+        time to pace arrivals and stamp per-request samples.  ``state
+        .now()`` is that sanctioned source: same epoch as the timer
+        (``time.perf_counter``), and its readings are only meaningful
+        relative to each other.
+        """
+        return time.perf_counter()
+
     # -- results ----------------------------------------------------------
     def deliver(self, value: Any) -> Any:
         """Declare the batch's output as the sync deliverable.
@@ -385,6 +407,23 @@ class State:
         """
         self.deliverables = value
         return value
+
+    def observe(self, sample: Mapping) -> Mapping:
+        """Deliver one per-*sample* measurement to the meter stack.
+
+        ``begin``/``end`` bracket a whole batch; some measurements are
+        per-event inside it — one serving request's TTFT and end-to-end
+        latency, one step's queue depth.  The body hands each event to
+        ``state.observe({"latency_s": ..., ...})`` and meters that
+        implement the observe channel (repro.core.measure.Meter.observe,
+        e.g. ``--meters latency``) aggregate them into counters.  With
+        no observing meter installed the sample is dropped — bodies
+        never need to know which meters are measuring them.  Returns
+        ``sample`` so it can wrap an expression in place.
+        """
+        if self._observer is not None:
+            self._observer(self, sample)
+        return sample
 
     def set_bytes_processed(self, n: int) -> None:
         self.bytes_processed = n

@@ -26,6 +26,10 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
         ("device-fenced wall time, real CPU time, and static "
          "flops/bytes_accessed counters on every record",
          "python -m repro run --meters wall,cpu,costmodel --jobs 2"),
+        ("serve under open-loop Poisson load with tail-latency counters "
+         "(p50/p99/p999, goodput against a 200 ms SLO) on every record",
+         "python -m repro run --enable-scope serve --param arrival=poisson "
+         "--meters wall,cpu,latency --slo-ms 200"),
         ("repetition statistics only, with throughput and meter "
          "counters carried onto the aggregate records",
          "python -m repro run --benchmark_repetitions 5 "

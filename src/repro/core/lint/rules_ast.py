@@ -11,7 +11,7 @@ import ast
 from typing import Iterable
 
 from .framework import FamilyContext, FamilyRule, Finding, LintContext, \
-    register_rule
+    RegistryRule, register_rule
 from .analysis import dotted_name
 
 #: Array-constructor / compile entry points that belong in a fixture —
@@ -267,3 +267,75 @@ class HardcodedKernelBlocks(FamilyRule):
                                 f"{kw.value.lineno}): literal knobs "
                                 f"shadow the tuned defaults shipped by "
                                 f"`python -m repro tune`"))
+
+
+@register_rule
+class HostClockInMeter(RegistryRule):
+    """A registered meter's measurement methods read a host clock.
+
+    Meters consume the timestamps the state and the sample payload
+    provide (``state.elapsed``, ``state.cpu_elapsed``, per-sample
+    ``latency_s``/``ttft_s`` fields stamped by the instrumented source).
+    A meter that calls ``time.time()``/``perf_counter()`` in
+    ``begin``/``observe``/``end`` re-measures *its own position in the
+    call sequence*, not the event: on an async backend the method runs
+    at dispatch-enqueue time, so the self-read clock reports enqueue —
+    the exact un-fenced-timestamp bug class the serve engine's
+    ``fence_timestamps`` and the wall meter's sync fence exist to fix.
+    """
+
+    id = "SCOPE108"
+    severity = "error"
+    title = ""
+    fix_hint = ("read timestamps from the state (state.elapsed, "
+                "state.cpu_elapsed) or from the sample payload the "
+                "instrumented source stamped after fencing — never from "
+                "a host clock inside the meter")
+
+    #: The methods the stack drives around/inside the measured batch.
+    METHODS = ("prepare", "begin", "observe", "end")
+
+    def check_registry(self, ctx: LintContext) -> Iterable[Finding]:
+        import inspect
+        import textwrap
+
+        from ..measure import METERS
+        for name, factory in sorted(METERS.items()):
+            cls = factory if isinstance(factory, type) else None
+            if cls is None:
+                try:
+                    cls = type(factory())
+                except Exception:  # noqa: BLE001 - unanalyzable factory
+                    continue
+            # own methods only: inherited Meter no-ops are clean by
+            # definition, and scanning them would blame every meter
+            # for one bad base class
+            for meth in self.METHODS:
+                fn = cls.__dict__.get(meth)
+                if fn is None:
+                    continue
+                fn = inspect.unwrap(getattr(fn, "__func__", fn))
+                try:
+                    src = textwrap.dedent(inspect.getsource(fn))
+                    tree = ast.parse(src)
+                except (OSError, TypeError, SyntaxError):
+                    continue
+                loc = ""
+                code = getattr(fn, "__code__", None)
+                if code is not None:
+                    loc = f"{code.co_filename}:{code.co_firstlineno}"
+                for node in ast.walk(tree):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    called = dotted_name(node.func)
+                    if called in WALL_CLOCK_CALLS:
+                        yield self.finding(
+                            family=f"meter:{name}",
+                            location=loc,
+                            message=(
+                                f"meter {name!r} ({cls.__name__}."
+                                f"{meth}) calls {called}(): meters "
+                                f"must consume state/sample-provided "
+                                f"timestamps, not read host clocks — "
+                                f"a self-read clock stamps enqueue "
+                                f"time under async dispatch"))

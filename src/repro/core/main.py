@@ -140,12 +140,21 @@ def build_run_parser() -> argparse.ArgumentParser:
     sel.add_argument("--meters", default=None, metavar="LIST",
                      help="comma-separated measurement meters driven "
                           "around every batch (available: wall, cpu, "
-                          "costmodel; default wall,cpu).  wall and cpu "
-                          "are always included — they are the record's "
-                          "time sources; costmodel adds "
+                          "costmodel, latency; default wall,cpu).  wall "
+                          "and cpu are always included — they are the "
+                          "record's time sources; costmodel adds "
                           "flops/bytes_accessed counters from the "
-                          "fixture's jitted callable "
-                          "(docs/measurement.md)")
+                          "fixture's jitted callable; latency consumes "
+                          "per-request samples (state.observe) and adds "
+                          "tail-percentile/goodput counters "
+                          "(docs/measurement.md, docs/serving.md)")
+    sel.add_argument("--slo-ms", type=float, default=None, metavar="MS",
+                     help="latency objective in milliseconds for the "
+                          "latency meter: goodput_rps counts only "
+                          "requests completing within the SLO and "
+                          "slo_attainment reports the fraction that did "
+                          "(default: no SLO — every completed request "
+                          "counts toward goodput)")
     sel.add_argument("--aggregates-only", action="store_true",
                      help="with --benchmark_repetitions > 1, report only "
                           "the mean/median/stddev aggregate records "
@@ -303,6 +312,7 @@ def run_main(argv: List[str],
             report_aggregates_only=sel_ns.aggregates_only,
             param_filter=param_filter,
             meters=meters,
+            slo_ms=sel_ns.slo_ms,
         ),
         flag_values={s.name: FLAGS.get(s.name) for s in FLAGS.declared()},
         results_dir=sel_ns.results_dir or None,

@@ -10,12 +10,15 @@ measurement into a provider API the runner drives around every warm,
 calibration and repetition batch:
 
   * :class:`Meter` — the provider protocol: ``begin(state)`` before the
-    batch body runs, ``end(state) -> {metric: value}`` after.  Two
-    metric keys are reserved and consumed by the runner for the
-    canonical GB record fields (:data:`WALL_TIME`, :data:`CPU_TIME`);
-    everything else a meter returns flows into the record as inlined
-    GB counters, so ScopePlot/report pick new metrics up with zero
-    schema work;
+    batch body runs, ``end(state) -> {metric: value}`` after, plus an
+    optional per-*sample* channel ``observe(state, sample)`` fed by
+    bodies calling ``state.observe({...})`` (one serving request's
+    latency, one step's queue depth — events inside the batch window
+    that begin/end cannot see).  Two metric keys are reserved and
+    consumed by the runner for the canonical GB record fields
+    (:data:`WALL_TIME`, :data:`CPU_TIME`); everything else a meter
+    returns flows into the record as inlined GB counters, so
+    ScopePlot/report pick new metrics up with zero schema work;
   * :class:`MeterStack` — an ordered set of meters built once per
     benchmark instance (``MeterStack.build``), begun in order and ended
     in reverse order around each batch, with derived roofline counters
@@ -37,7 +40,16 @@ calibration and repetition batch:
     ``dot``), with ``Lowered.cost_analysis()`` as the fallback for
     quantities the analyzer cannot see (elementwise FLOPs).  Combined
     with the wall clock it emits achieved ``flops_per_second`` on every
-    record for free.
+    record for free;
+  * :class:`LatencyMeter` — the observe-channel consumer (``--meters
+    latency``): collects per-request ``ttft_s``/``latency_s`` and
+    per-step ``queue_depth`` samples from ``state.observe`` and emits
+    tail percentiles (``latency_p50_s`` … ``latency_p999_s``,
+    ``ttft_p50_s``/``ttft_p99_s``), ``queue_depth_mean``, and
+    ``goodput_rps`` — requests per second completed within the SLO
+    (``--slo-ms``; every completed request counts when no SLO is set)
+    plus ``slo_attainment`` when one is.  Means are the wrong statistic
+    for serving traffic; this meter is why per-sample delivery exists.
 
 Meter sets are selected per run (``--meters wall,cpu,costmodel`` →
 ``RunOptions.meters``) or per family (``bench.set_meters(...)``); the
@@ -125,10 +137,16 @@ class Meter:
 
     ``begin(state)`` runs immediately before the batch body,
     ``end(state)`` immediately after; ``end`` returns ``{metric:
-    value}``.  ``bind(bench)`` is called once when the stack is built so
-    a meter can read per-family configuration (sync hook, manual-time
-    mode).  Meters must not mutate the measurement itself — the wall
-    meter owns the clock.
+    value}``.  ``observe(state, sample)`` is the per-*sample* channel:
+    the stack routes every ``state.observe({...})`` the body makes to
+    every meter, so a meter can aggregate events (requests, steps)
+    that happen *inside* the batch window.  ``bind(bench)`` is called
+    once when the stack is built so a meter can read per-family
+    configuration (sync hook, manual-time mode); ``configure(opts)``
+    hands it the run options (``--slo-ms`` and friends).  Meters must
+    not mutate the measurement itself — the wall meter owns the clock,
+    and observe implementations must read timestamps from the state or
+    the sample payload, never from host clocks (repro lint SCOPE108).
     """
 
     name = "meter"
@@ -136,12 +154,18 @@ class Meter:
     def bind(self, bench) -> None:  # pragma: no cover - default no-op
         pass
 
+    def configure(self, opts) -> None:  # pragma: no cover - default no-op
+        """Run-level configuration (a ``RunOptions``), once at build."""
+
     def prepare(self, state) -> None:  # pragma: no cover - default no-op
         """Once per instance, before the warm batch — expensive one-time
         analysis belongs here so it cannot pollute ``compile_time_s``."""
 
     def begin(self, state) -> None:  # pragma: no cover - default no-op
         pass
+
+    def observe(self, state, sample) -> None:  # pragma: no cover - no-op
+        """One per-sample event from ``state.observe`` (a mapping)."""
 
     def end(self, state) -> Dict[str, float]:
         return {}
@@ -295,11 +319,91 @@ class CostModelMeter(Meter):
         return out
 
 
+class LatencyMeter(Meter):
+    """Tail-latency distribution counters from the per-sample channel.
+
+    Consumes ``state.observe({...})`` samples the batch body delivers:
+
+      * ``latency_s`` — one request's end-to-end latency (submit →
+        last token delivered);
+      * ``ttft_s`` — the same request's time to first token;
+      * ``queue_depth`` — one engine step's queued + in-flight count.
+
+    ``end`` reduces them to GB counters: ``latency_p50_s`` /
+    ``latency_p90_s`` / ``latency_p99_s`` / ``latency_p999_s``,
+    ``ttft_p50_s`` / ``ttft_p99_s``, ``queue_depth_mean``,
+    ``requests_completed``, and ``goodput_rps`` — completed requests
+    per second of batch wall time that met the SLO (``--slo-ms`` →
+    ``RunOptions.slo_ms``; with no SLO every completed request counts).
+    ``slo_attainment`` (fraction within SLO) appears only when an SLO
+    is configured, so default-run records stay byte-stable.
+
+    Percentiles are exact (:mod:`repro.core.quantile`) — per-batch
+    sample counts are small; the module's P² streaming estimator is
+    the documented escape hatch when they stop being small.  Samples
+    observed across the iterations of one batch are merged with the
+    order-invariant :func:`repro.core.quantile.combine`, so shard
+    grain and worker count cannot change the counters.
+    """
+
+    name = "latency"
+
+    def __init__(self, slo_ms: Optional[float] = None):
+        self._ctor_slo = slo_ms          # explicit ctor SLO always wins
+        self.slo_ms = slo_ms
+        self._latency: List[List[float]] = []
+        self._ttft: List[List[float]] = []
+        self._depth: List[float] = []
+
+    def configure(self, opts) -> None:
+        if self._ctor_slo is None:
+            self.slo_ms = getattr(opts, "slo_ms", None)
+
+    def begin(self, state) -> None:
+        # one bucket per iteration: samples merge order-invariantly in
+        # end(), mirroring how shards merge across workers
+        self._latency = [[]]
+        self._ttft = [[]]
+        self._depth = []
+
+    def observe(self, state, sample) -> None:
+        if "latency_s" in sample:
+            self._latency[-1].append(float(sample["latency_s"]))
+        if "ttft_s" in sample:
+            self._ttft[-1].append(float(sample["ttft_s"]))
+        if "queue_depth" in sample:
+            self._depth.append(float(sample["queue_depth"]))
+
+    def end(self, state) -> Dict[str, float]:
+        from .quantile import combine, percentile, tail_percentiles
+        out: Dict[str, float] = {}
+        lat = combine(*self._latency)
+        ttft = combine(*self._ttft)
+        out.update(tail_percentiles(lat, prefix="latency_"))
+        if ttft:
+            out["ttft_p50_s"] = percentile(ttft, 0.50)
+            out["ttft_p99_s"] = percentile(ttft, 0.99)
+        if self._depth:
+            out["queue_depth_mean"] = sum(self._depth) / len(self._depth)
+        if lat:
+            out["requests_completed"] = float(len(lat))
+            slo_s = self.slo_ms / 1e3 if self.slo_ms is not None else None
+            good = len(lat) if slo_s is None \
+                else sum(1 for t in lat if t <= slo_s)
+            span = state.manual_elapsed or state.elapsed
+            if span > 0:
+                out["goodput_rps"] = good / span
+            if slo_s is not None:
+                out["slo_attainment"] = good / len(lat)
+        return out
+
+
 #: Built-in meter registry: ``--meters`` names → factories.
 METERS: Dict[str, Callable[[], Meter]] = {
     "wall": WallClockMeter,
     "cpu": CpuTimeMeter,
     "costmodel": CostModelMeter,
+    "latency": LatencyMeter,
 }
 
 
@@ -346,14 +450,18 @@ class MeterStack:
         self.meters = list(meters)
 
     @classmethod
-    def build(cls, spec: Optional[Sequence[Any]], bench) -> "MeterStack":
+    def build(cls, spec: Optional[Sequence[Any]], bench,
+              run_opts: Optional[Any] = None) -> "MeterStack":
         """Resolve a meter spec (names, instances, factories) for one
         family.  The wall and CPU meters are mandatory and prepended
         when the spec omits them: the wall meter is the run's time
         source, and a missing CPU meter would silently revert
         ``cpu_time`` to a copy of ``real_time`` — the exact defect the
         meter layer exists to fix.  ``--meters``/``set_meters`` select
-        the *opt-in* meters on top of that core.
+        the *opt-in* meters on top of that core.  ``run_opts`` (a
+        :class:`repro.core.runner.RunOptions`, when available) lets
+        meters pick up run-level settings like ``--slo-ms`` via
+        :meth:`Meter.configure`.
         """
         meters: List[Meter] = []
         for item in (spec or DEFAULT_METERS):
@@ -371,6 +479,8 @@ class MeterStack:
             meters.insert(0, WallClockMeter())
         for m in meters:
             m.bind(bench)
+            if run_opts is not None:
+                m.configure(run_opts)
         return cls(meters)
 
     def prepare(self, state) -> None:
@@ -378,8 +488,14 @@ class MeterStack:
             m.prepare(state)
 
     def begin(self, state) -> None:
+        # route state.observe(...) samples to every meter in the stack
+        state._observer = self._observe
         for m in self.meters:
             m.begin(state)
+
+    def _observe(self, state, sample) -> None:
+        for m in self.meters:
+            m.observe(state, sample)
 
     def end(self, state) -> Dict[str, float]:
         metrics: Dict[str, float] = {}

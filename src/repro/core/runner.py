@@ -73,6 +73,9 @@ class RunOptions:
     # Plain strings so the options survive the JSON round-trip to
     # subprocess workers at both shard grains.
     meters: Optional[List[str]] = None
+    # --slo-ms: latency objective the latency meter judges goodput
+    # against (milliseconds; None → every completed request is good)
+    slo_ms: Optional[float] = None
 
 
 @dataclass
@@ -171,7 +174,7 @@ def run_instance(bench: Benchmark, point, opts: RunOptions
     reps = bench.repetitions if bench.repetitions is not None else opts.repetitions
     unit_scale = TIME_UNITS[bench.unit]
     stack = MeterStack.build(bench.meters if bench.meters is not None
-                             else opts.meters, bench)
+                             else opts.meters, bench, run_opts=opts)
 
     # -- fixture: setup(params) -> ctx, untimed --------------------------
     fixture = None

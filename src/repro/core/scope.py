@@ -48,6 +48,7 @@ BUILTIN_SCOPES = [
     "repro.scopes.linalg_scope",
     "repro.scopes.io_scope",
     "repro.scopes.model_scope",
+    "repro.scopes.serve_scope",
 ]
 
 

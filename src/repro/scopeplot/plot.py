@@ -39,7 +39,12 @@ Plot types (full schema reference: ``docs/scopeplot.md``):
     per matching run_name; needs a top-level ``baseline:`` mapping;
   * ``timeseries`` — cross-run trend lines read from a run-history
     ``history.jsonl`` (one line per benchmark, x = run, y = mean ±
-    stddev).
+    stddev);
+  * ``latency_cdf`` — tail-latency CDF per matching record, drawn
+    through the latency meter's percentile-grid counters
+    (``latency_p50_s`` … ``latency_p999_s``; ``field:`` selects
+    another prefix, e.g. ``ttft``) with a log-scaled probability axis
+    so p99/p999 are readable.
 
 Error contract: :func:`load_spec` raises :class:`SpecError` (a
 ``ValueError``) with ``<path>:<line>: <message>`` *before* any data is
@@ -62,7 +67,7 @@ import matplotlib.pyplot as plt           # noqa: E402
 
 #: Every plot type render_spec understands.
 PLOT_TYPES = ("line", "bar", "grouped_bar", "regression", "speedup",
-              "timeseries")
+              "timeseries", "latency_cdf")
 
 
 class SpecError(ValueError):
@@ -409,6 +414,46 @@ def _draw_timeseries(ax, spec: Dict[str, Any], base_dir: str) -> None:
     ax.margins(x=0.05)
 
 
+def _draw_latency_cdf(ax, spec: Dict[str, Any], base_dir: str) -> None:
+    """Tail-latency CDF per record from percentile-grid counters.
+
+    The latency meter puts p50/p90/p99/p999 on every record; each
+    matching record becomes one CDF line through those four points
+    (x = latency, y = cumulative fraction).  ``field:`` on a series
+    switches the counter prefix (default ``latency``; ``ttft`` plots
+    first-token CDFs).  The y axis plots ``1 - q`` on a log scale when
+    ``y_axis: {scale: log}`` is requested, which is the standard way to
+    make the p99/p999 decades readable.
+    """
+    from repro.core.quantile import TAIL_QUANTILES
+    tail = spec.get("y_axis", {}).get("scale") == "log"
+    for i, series in enumerate(spec["series"]):
+        path = _resolve(series["input_file"], base_dir)
+        bf = load(path).without_errors().without_aggregates()
+        if "regex" in series:
+            bf = bf.filter_name(series["regex"])
+        if "params" in series:
+            bf = bf.filter_params(series["params"])
+        field = series.get("field", "latency")
+        xscale = float(series.get("xscale", 1.0))
+        tag = series.get("label")
+        for rec in bf.records:
+            pts = [(float(rec.get(f"{field}_{suffix}_s")) * xscale, q)
+                   for suffix, q in TAIL_QUANTILES
+                   if rec.get(f"{field}_{suffix}_s") is not None]
+            if not pts:
+                continue
+            xs = [p[0] for p in pts]
+            ys = [1.0 - p[1] for p in pts] if tail else [p[1] for p in pts]
+            name = rec.get("run_name") or rec.name
+            label = f"{name} [{tag}]" if tag and len(spec["series"]) > 1 \
+                else name
+            ax.plot(xs, ys, marker="o", label=label)
+    if tail:
+        ax.set_ylabel(spec.get("y_axis", {}).get("label")
+                      or "P(latency > x)")
+
+
 _RENDERERS = {
     "line": _draw_line,
     "bar": _draw_bar,
@@ -416,6 +461,7 @@ _RENDERERS = {
     "regression": _draw_regression,
     "speedup": _draw_speedup,
     "timeseries": _draw_timeseries,
+    "latency_cdf": _draw_latency_cdf,
 }
 
 

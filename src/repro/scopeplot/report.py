@@ -199,7 +199,8 @@ def _scope_plots(scope: str, specs_dir: str, out_dir: str,
                  merged_path: Optional[str], history_file: Optional[str],
                  prev_doc_path: Optional[str], run_label: str,
                  history_records: Optional[List[Dict[str, Any]]] = None,
-                 prev_names: Optional[set] = None
+                 prev_names: Optional[set] = None,
+                 latency: bool = False
                  ) -> List[Tuple[str, str]]:
     """Generate+render this scope's plots; (caption, path rel to out).
 
@@ -207,7 +208,9 @@ def _scope_plots(scope: str, specs_dir: str, out_dir: str,
     ``history_file`` and ``prev_names`` the benchmark names inside
     ``prev_doc_path`` — passed in so the per-scope loop doesn't reparse
     either file (the rendered specs still read the files themselves —
-    generated specs must stay standalone).
+    generated specs must stay standalone).  ``latency`` adds the
+    tail-latency CDF page for scopes whose records carry latency-meter
+    percentile counters (``--meters latency``).
     """
     plots: List[Tuple[str, str]] = []
     rx = _scope_regex(scope)
@@ -225,6 +228,18 @@ def _scope_plots(scope: str, specs_dir: str, out_dir: str,
         })
         plots.append((f"{scope}: mean time per instance",
                       _rel(out, out_dir)))
+    if merged_path and latency:
+        out = _emit_spec(specs_dir, f"{scope}_latency", {
+            "title": f"{scope} — request latency CDF (per instance)",
+            "type": "latency_cdf",
+            "output": f"../{scope}_latency.png",
+            "x_axis": {"label": "end-to-end latency (ms)"},
+            "y_axis": {"label": "fraction of requests"},
+            "series": [{"label": run_label,
+                        "input_file": _rel(merged_path, specs_dir),
+                        "regex": rx, "xscale": 1e3}],
+        })
+        plots.append((f"{scope}: tail-latency CDF", _rel(out, out_dir)))
     if history_file and os.path.exists(history_file):
         records = history_records if history_records is not None \
             else hist.load_history(history_file)
@@ -311,13 +326,35 @@ def _roofline_cells(doc: Dict[str, Any]) -> Dict[str, str]:
     return out
 
 
+def _latency_cells(doc: Dict[str, Any]) -> Dict[str, Tuple[str, str]]:
+    """run_name → (p99 latency, goodput) cells, for runs measured with
+    the latency meter (``--meters latency``, docs/serving.md).
+
+    Empty when no record carries tail-percentile counters — like the
+    roofline column, the verdict table only grows these columns when
+    the data exists, so reports from default runs stay byte-identical.
+    """
+    counters = hist.doc_counters(doc)
+    out: Dict[str, Tuple[str, str]] = {}
+    for name, c in counters.items():
+        p99 = c.get("latency_p99_s")
+        good = c.get("goodput_rps")
+        if p99 is None and good is None:
+            continue
+        out[name] = (_fmt_time(p99) if p99 is not None else "-",
+                     f"{good:.1f} req/s" if good is not None else "-")
+    return out
+
+
 def _verdict_rows(doc: Dict[str, Any],
                   run_records: List[Dict[str, Any]],
-                  roofline: Optional[Dict[str, str]] = None
+                  roofline: Optional[Dict[str, str]] = None,
+                  latency: Optional[Dict[str, Tuple[str, str]]] = None
                   ) -> List[List[str]]:
-    """benchmark | mean | stddev | n | compile | [roofline] | vs previous
-    | ratio — the roofline column appears only when cost-model metrics
-    are present (pass the non-empty ``_roofline_cells`` result)."""
+    """benchmark | mean | stddev | n | compile | [roofline] | [p99 |
+    goodput] | vs previous | ratio — the roofline and latency columns
+    appear only when their metrics are present (pass the non-empty
+    ``_roofline_cells`` / ``_latency_cells`` results)."""
     by_name = {r["name"]: r for r in run_records}
     compile_by_name = _compile_times(doc)
     rows: List[List[str]] = []
@@ -333,6 +370,9 @@ def _verdict_rows(doc: Dict[str, Any],
         ]
         if roofline:
             row.append(roofline.get(name, "-"))
+        if latency:
+            p99, good = latency.get(name, ("-", "-"))
+            row += [p99, good]
         row += [
             rec.get("verdict", "-"),
             f"{ratio:.2f}x" if ratio is not None else "-",
@@ -455,13 +495,17 @@ def generate_run_report(run_dir: str, history_file: Optional[str] = None,
     else:
         verdicts.text("No history records for this run — verdicts appear "
                       "once the run is recorded in history.jsonl.")
-    roofline = _roofline_cells(bf.to_dict())
+    doc = bf.to_dict()
+    roofline = _roofline_cells(doc)
+    latency = _latency_cells(doc)
     headers = ["benchmark", "mean", "stddev", "n", "compile"]
     if roofline:
         headers.append("roofline")
+    if latency:
+        headers += ["p99 latency", "goodput"]
     headers += ["vs previous", "ratio"]
     verdicts.table(headers,
-                   _verdict_rows(bf.to_dict(), run_records, roofline))
+                   _verdict_rows(doc, run_records, roofline, latency))
     sections.append(verdicts)
     sections.append(_drift_section(scoped_records, window))
 
@@ -471,7 +515,9 @@ def generate_run_report(run_dir: str, history_file: Optional[str] = None,
                              plot_history_file if scoped_records else None,
                              prev_doc_path, f"run {run_id}",
                              history_records=scoped_records,
-                             prev_names=prev_names)
+                             prev_names=prev_names,
+                             latency=any(n.startswith(scope + "/")
+                                         for n in latency))
         if not plots:
             sec.text("No plottable records.")
         for caption, rel in plots:

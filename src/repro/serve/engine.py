@@ -45,6 +45,11 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
+    prompt_len: int = 0
+    # generation stopped because the slot's cache filled (max_len), not
+    # because of EOS/max_tokens — the output is complete but shorter
+    # than requested
+    truncated: bool = False
 
 
 @dataclass
@@ -54,6 +59,12 @@ class ServeConfig:
     prompt_buckets: Tuple[int, ...] = (32, 64, 128, 256)
     cache_dtype: Any = jnp.bfloat16
     greedy: bool = True
+    # fence (block_until_ready) decoded tokens before stamping
+    # first_token_at/done_at, so TTFT/latency measure *delivery*.
+    # False reverts to stamping at dispatch-return — enqueue time, the
+    # async-dispatch bug class the wall meter fences in batch timing —
+    # and exists so the regression test can measure the gap.
+    fence_timestamps: bool = True
 
 
 class ServeEngine:
@@ -80,26 +91,62 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, t, c: transformer.decode_step_ragged(api.cfg, p, t, c))
         self._prefill_cache = {}
+        # host-side per-slot position clocks (prefix + decoded tokens):
+        # max_len exhaustion is a host decision, it must not force the
+        # device cache
+        self._slot_pos = [0] * cfg.max_batch
+        #: queued + in-flight request count sampled once per step() —
+        #: the queue-depth series latency meters average
+        self.queue_depth_log: List[int] = []
 
     # -- public API -------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_tokens: int = 32,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None,
+               submitted_at: Optional[float] = None) -> Request:
+        """Queue one request.  ``submitted_at`` lets open-loop drivers
+        stamp the *scheduled arrival* instant so latency includes the
+        queueing the arrival process created (default: now)."""
+        prompt = np.asarray(prompt, np.int32)
+        biggest = max(self.cfg.prompt_buckets)
+        if len(prompt) > biggest:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds the largest "
+                f"prefill bucket ({biggest}); raise ServeConfig."
+                f"prompt_buckets (currently {self.cfg.prompt_buckets}) "
+                f"or chunk the prompt")
+        if len(prompt) >= self.cfg.max_len:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens cannot fit a "
+                f"max_len={self.cfg.max_len} cache with room to decode; "
+                f"raise ServeConfig.max_len")
         self._uid += 1
-        req = Request(self._uid, np.asarray(prompt, np.int32), max_tokens,
-                      eos_id, submitted_at=time.perf_counter())
+        req = Request(self._uid, prompt, max_tokens, eos_id,
+                      submitted_at=(time.perf_counter()
+                                    if submitted_at is None
+                                    else submitted_at),
+                      prompt_len=len(prompt))
         self.queue.append(req)
         return req
+
+    def step(self) -> List[Request]:
+        """One engine step: admit from the queue, decode every live slot
+        one token.  Returns the requests that finished this step (empty
+        when the pool is idle).  ``run`` is a loop over this; open-loop
+        drivers interleave it with scheduled ``submit`` calls."""
+        self._admit()
+        depth = len(self.queue) + sum(1 for s in self.slots if s is not None)
+        self.queue_depth_log.append(depth)
+        if not any(s is not None for s in self.slots):
+            return []
+        return self._decode_step()
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Drive until queue and slots drain.  Returns finished requests."""
         finished: List[Request] = []
         for _ in range(max_steps):
-            self._admit()
-            if not any(self.slots):
-                if not self.queue:
-                    break
-                continue
-            finished.extend(self._decode_step())
+            if not self.queue and not any(s is not None for s in self.slots):
+                break
+            finished.extend(self.step())
         return finished
 
     # -- internals ------------------------------------------------------
@@ -107,7 +154,9 @@ class ServeEngine:
         for b in self.cfg.prompt_buckets:
             if n <= b:
                 return b
-        return self.cfg.prompt_buckets[-1]
+        raise ValueError(                      # unreachable via submit()
+            f"no prompt bucket fits {n} tokens "
+            f"(buckets: {self.cfg.prompt_buckets})")
 
     def _admit(self) -> None:
         for i in range(self.cfg.max_batch):
@@ -136,10 +185,15 @@ class ServeEngine:
         # right-padded prompt: this slot's clock is n, so padded keys
         # beyond position n are masked by the per-slot prefix length
         row_cache = dict(row_cache, pos=jnp.asarray([n], jnp.int32))
+        if self.cfg.fence_timestamps:
+            jax.block_until_ready(logits_row)
+        # fenced: the token is on the host — TTFT measures delivery;
+        # unfenced: the dispatch just returned — TTFT measures enqueue
+        req.first_token_at = time.perf_counter()
         tok = int(jnp.argmax(logits_row[0, -1]))
         req.output.append(tok)
-        req.first_token_at = time.perf_counter()
         self.cache = _splice_row(self.cache, row_cache, slot)
+        self._slot_pos[slot] = n
         self._pending_tok = getattr(self, "_pending_tok",
                                     np.zeros(self.cfg.max_batch, np.int32))
         self._pending_tok[slot] = tok
@@ -147,6 +201,9 @@ class ServeEngine:
     def _decode_step(self) -> List[Request]:
         toks = jnp.asarray(self._pending_tok)[:, None]
         logits, self.cache = self._decode(self.params, toks, self.cache)
+        if self.cfg.fence_timestamps:
+            jax.block_until_ready(logits)
+        stamp = time.perf_counter()
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         done: List[Request] = []
         for i, req in enumerate(self.slots):
@@ -155,9 +212,18 @@ class ServeEngine:
             tok = int(nxt[i])
             req.output.append(tok)
             self._pending_tok[i] = tok
+            self._slot_pos[i] += 1
+            # the slot's cache is full when the *next* decode would
+            # write at max_len: terminate rather than overrun the
+            # static cache (the request is truncated, not failed)
+            exhausted = self._slot_pos[i] + 1 >= self.cfg.max_len
             if (len(req.output) >= req.max_tokens or
-                    (req.eos_id is not None and tok == req.eos_id)):
-                req.done_at = time.perf_counter()
+                    (req.eos_id is not None and tok == req.eos_id) or
+                    exhausted):
+                if exhausted and len(req.output) < req.max_tokens and \
+                        not (req.eos_id is not None and tok == req.eos_id):
+                    req.truncated = True
+                req.done_at = stamp
                 done.append(req)
                 self.slots[i] = None
         return done
@@ -165,14 +231,19 @@ class ServeEngine:
     # -- metrics ----------------------------------------------------------
     @staticmethod
     def summarize(reqs: List[Request]) -> Dict[str, float]:
+        """Batch-level summary stats; robust to empty and all-failed
+        batches (no request ever reached ``done_at``) — means and
+        throughput report 0.0 rather than crashing mid-postmortem."""
         if not reqs:
             return {}
         ttft = [r.first_token_at - r.submitted_at for r in reqs
-                if r.first_token_at]
-        lat = [r.done_at - r.submitted_at for r in reqs if r.done_at]
+                if r.first_token_at is not None]
+        lat = [r.done_at - r.submitted_at for r in reqs
+               if r.done_at is not None]
         toks = sum(len(r.output) for r in reqs)
-        span = (max(r.done_at for r in reqs if r.done_at)
-                - min(r.submitted_at for r in reqs))
+        finished = [r.done_at for r in reqs if r.done_at is not None]
+        span = (max(finished) - min(r.submitted_at for r in reqs)
+                if finished else 0.0)
         return {"requests": len(reqs), "tokens": toks,
                 "ttft_mean_s": float(np.mean(ttft)) if ttft else 0.0,
                 "latency_mean_s": float(np.mean(lat)) if lat else 0.0,
@@ -197,6 +268,12 @@ def _splice_row(pool_cache, row_cache, slot: int):
             return pool.at[slot].set(row[0])   # per-slot pos vector
         if pool.ndim == 1 and row.ndim == 0:
             return pool.at[slot].set(row)
+        if pool.shape == row.shape:
+            # max_batch == 1: the pool IS one row, there is no axis to
+            # search for (the size-1 batch dim matches everywhere) —
+            # without this case a single-slot engine silently drops the
+            # prefilled cache and decodes over zeros
+            return row
         if pool.shape[0] != row.shape[0]:      # stacked-first? not expected
             return pool
         # find the batch axis: first axis where sizes differ

@@ -1,0 +1,90 @@
+"""repro.core.arrivals: seeded open-loop traffic generators — shape,
+validation, and the byte-identical-replay determinism contract."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.arrivals import (ARRIVAL_KINDS, bursty, diurnal, generate,
+                                 poisson)
+
+
+def _is_sorted(xs):
+    return all(a <= b for a, b in zip(xs, xs[1:]))
+
+
+@pytest.mark.parametrize("kind", ARRIVAL_KINDS)
+def test_generators_produce_sorted_positive_offsets(kind):
+    offs = generate(kind, rate=20.0, n=50, seed=3)
+    assert len(offs) == 50
+    assert _is_sorted(offs)
+    assert all(t > 0.0 for t in offs)
+
+
+@pytest.mark.parametrize("kind", ARRIVAL_KINDS)
+def test_same_seed_replays_byte_identical(kind):
+    a = generate(kind, rate=8.0, n=40, seed=7)
+    b = generate(kind, rate=8.0, n=40, seed=7)
+    assert a == b                              # identical floats, not close
+    assert generate(kind, rate=8.0, n=40, seed=8) != a
+
+
+def test_poisson_mean_rate_converges():
+    offs = poisson(rate=50.0, n=5000, seed=0)
+    mean_gap = offs[-1] / len(offs)
+    assert mean_gap == pytest.approx(1.0 / 50.0, rel=0.1)
+
+
+def test_bursty_has_more_variance_than_poisson():
+    """The whole point of the on/off process: same mean-ish rate, much
+    burstier inter-arrival distribution."""
+    import statistics
+    p = poisson(rate=40.0, n=2000, seed=1)
+    b = bursty(rate=40.0, n=2000, seed=1)
+    gaps = lambda xs: [y - x for x, y in zip(xs, xs[1:])]  # noqa: E731
+    assert statistics.pvariance(gaps(b)) > statistics.pvariance(gaps(p))
+
+
+def test_diurnal_ramps_density_with_period():
+    """Arrivals cluster mid-period (rate peak) vs the window edges."""
+    offs = diurnal(rate=200.0, n=400, seed=2, period=2.0, floor=0.05)
+    horizon = offs[-1]
+    mid = sum(1 for t in offs if 0.5 <= (t % 2.0) < 1.5)
+    edge = sum(1 for t in offs if (t % 2.0) < 0.5 or (t % 2.0) >= 1.5)
+    assert horizon > 0
+    assert mid > edge
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="rate"):
+        poisson(rate=0.0, n=5)
+    with pytest.raises(ValueError, match="count"):
+        poisson(rate=1.0, n=-1)
+    with pytest.raises(ValueError, match="burst_factor"):
+        bursty(rate=1.0, n=5, burst_factor=0.0)
+    with pytest.raises(ValueError, match="floor"):
+        diurnal(rate=1.0, n=5, floor=0.0)
+    with pytest.raises(ValueError, match="available"):
+        generate("uniform", rate=1.0, n=5)
+
+
+def test_generate_zero_requests_is_empty():
+    assert generate("poisson", rate=5.0, n=0) == []
+
+
+def test_trace_replays_byte_identical_across_processes():
+    """The determinism contract shard workers rely on: a fresh
+    interpreter reproduces the exact same floats for (kind, rate, n,
+    seed).  The module is jax-free, so the subprocess import is cheap."""
+    local = repr([generate(k, 16.0, 10, seed=5) for k in ARRIVAL_KINDS])
+    code = ("from repro.core.arrivals import ARRIVAL_KINDS, generate;"
+            "print(repr([generate(k, 16.0, 10, seed=5)"
+            " for k in ARRIVAL_KINDS]))")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath("src")] + ([env["PYTHONPATH"]]
+                                    if env.get("PYTHONPATH") else []))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, check=True)
+    assert out.stdout.strip() == local

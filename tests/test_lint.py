@@ -624,7 +624,7 @@ def test_findings_carry_registration_location(no_body_runs):
 
 
 # ---------------------------------------------------------------------------
-# the nine builtin scopes lint clean — without executing anything
+# the ten builtin scopes lint clean — without executing anything
 # ---------------------------------------------------------------------------
 
 def test_builtin_scopes_lint_clean(no_body_runs):
@@ -636,7 +636,7 @@ def test_builtin_scopes_lint_clean(no_body_runs):
     assert len(benches) >= 20
     report = run_lint(benches, scope_names=sorted(mgr.status()),
                       compile_checks=False)
-    assert report.scopes_checked == 9
+    assert report.scopes_checked == 10
     assert not report.failed(strict=True), report.format_text()
 
 
@@ -820,3 +820,70 @@ def test_analysis_handles_for_loop_and_nested_loops(no_body_runs):
     b = r.get("s/forloop")
     ana = FamilyAnalysis(b)
     assert len(ana.timed_loops) == 1
+
+
+# ---------------------------------------------------------------------------
+# SCOPE108 — meters reading host clocks
+# ---------------------------------------------------------------------------
+
+def _clean_family(r):
+    def body(state):
+        while state.keep_running():
+            state.deliver(1)
+        state.set_items_processed(1)
+    register_benchmark("f", body, scope="s", registry=r)
+
+
+def test_scope108_triggers_on_clock_reading_meter(no_body_runs, monkeypatch):
+    import time
+
+    from repro.core.measure import METERS, Meter
+
+    class StampsItself(Meter):
+        name = "stampsitself"
+
+        def begin(self, state):
+            self._t0 = time.perf_counter()
+
+        def end(self, state):
+            return {"elapsed": time.perf_counter() - self._t0}
+
+    monkeypatch.setitem(METERS, "stampsitself", StampsItself)
+    r = reg()
+    _clean_family(r)
+    found = [f for f in lint(r).findings if f.rule == "SCOPE108"]
+    assert found
+    assert all(f.family == "meter:stampsitself" for f in found)
+    assert all(f.severity == "error" for f in found)
+    assert {m for f in found for m in ("begin", "end")
+            if f"StampsItself.{m}" in f.message} == {"begin", "end"}
+
+
+def test_scope108_flags_the_observe_channel(no_body_runs, monkeypatch):
+    """observe() is the per-sample path — a self-read clock there stamps
+    enqueue time per request, the exact bug class fence_timestamps
+    exists for."""
+    import time
+
+    from repro.core.measure import METERS, Meter
+
+    class ObserveStamper(Meter):
+        name = "observestamper"
+
+        def observe(self, state, sample):
+            sample = dict(sample)
+            sample["seen_at"] = time.time()
+
+    monkeypatch.setitem(METERS, "observestamper", ObserveStamper)
+    r = reg()
+    _clean_family(r)
+    found = [f for f in lint(r).findings if f.rule == "SCOPE108"]
+    assert len(found) == 1
+    assert "ObserveStamper.observe" in found[0].message
+    assert "time.time" in found[0].message
+
+
+def test_scope108_builtin_meters_are_clean(no_body_runs):
+    r = reg()
+    _clean_family(r)
+    assert "SCOPE108" not in rules_of(lint(r))

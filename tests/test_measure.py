@@ -542,3 +542,92 @@ def test_meters_survive_subprocess_workers(monkeypatch, tmp_path):
     by_name = {r["name"]: r for r in hist}
     for rec in recs:
         assert by_name[rec["name"]]["counters"]["flops"] == rec["flops"]
+
+
+# ---------------------------------------------------------------------------
+# LatencyMeter + the per-sample observe channel
+# ---------------------------------------------------------------------------
+
+def _observing_family(reg, latencies, slo_extra=()):
+    """A body that plays back a fixed latency trace through
+    state.observe — the serve scope's shape without a model."""
+    @benchmark(name="obs", scope="t", registry=reg)
+    def obs(state):
+        while state.keep_running():
+            for i, lat in enumerate(list(latencies) + list(slo_extra)):
+                state.observe({"latency_s": lat, "ttft_s": lat / 2.0,
+                               "queue_depth": i % 4})
+    obs.set_iterations(1)
+    return obs
+
+
+def test_latency_meter_reports_tail_counters():
+    from repro.core.quantile import percentile
+    reg = BenchmarkRegistry()
+    trace = [0.001 * (i + 1) for i in range(20)]
+    _observing_family(reg, trace)
+    doc = run_benchmarks(
+        reg.all(), RunOptions(meters=["wall", "cpu", "latency"]),
+        progress=False)
+    rec = _records(doc)[0]
+    for q in ("p50", "p90", "p99", "p999"):
+        assert rec[f"latency_{q}_s"] > 0
+    assert rec["latency_p50_s"] == pytest.approx(percentile(trace, 0.50))
+    assert rec["latency_p999_s"] == pytest.approx(percentile(trace, 0.999))
+    assert rec["ttft_p50_s"] == pytest.approx(rec["latency_p50_s"] / 2.0)
+    assert rec["requests_completed"] == 20.0
+    assert rec["queue_depth_mean"] == pytest.approx(
+        sum(i % 4 for i in range(20)) / 20.0)
+    assert rec["goodput_rps"] > 0                 # no SLO: all count as good
+    assert "slo_attainment" not in rec            # only reported under an SLO
+
+
+def test_latency_meter_honors_slo():
+    """--slo-ms reaches the meter through RunOptions: goodput counts
+    only requests at-or-under the objective, attainment is their
+    fraction."""
+    reg = BenchmarkRegistry()
+    _observing_family(reg, [0.005] * 3, slo_extra=[0.050])    # 3 fast, 1 slow
+    doc = run_benchmarks(
+        reg.all(),
+        RunOptions(meters=["wall", "cpu", "latency"], slo_ms=10.0),
+        progress=False)
+    rec = _records(doc)[0]
+    assert rec["slo_attainment"] == pytest.approx(0.75)
+    assert rec["requests_completed"] == 4.0
+    # goodput excludes the SLO-violating request
+    assert rec["goodput_rps"] == pytest.approx(
+        0.75 * rec["requests_completed"] / (rec["real_time"] / 1e6),
+        rel=1e-6)
+
+
+def test_observe_without_observer_is_a_noop():
+    """Bodies can observe unconditionally: with no observing meter the
+    sample is dropped, and observe still returns it for in-place use."""
+    from repro.core.benchmark import State
+    st = State(max_iterations=1)
+    sample = {"latency_s": 0.1}
+    assert st.observe(sample) is sample
+
+
+def test_observe_channel_dispatches_to_every_meter():
+    from repro.core.benchmark import State
+    from repro.core.measure import Meter
+
+    class Capture(Meter):
+        name = "capture"
+
+        def __init__(self):
+            self.samples = []
+
+        def observe(self, state, sample):
+            self.samples.append(dict(sample))
+
+    a, b = Capture(), Capture()
+    stack = MeterStack([a, b])
+    st = State(max_iterations=1)
+    stack.begin(st)
+    st.observe({"latency_s": 1.0})
+    st.observe({"latency_s": 2.0})
+    assert a.samples == b.samples == [{"latency_s": 1.0},
+                                      {"latency_s": 2.0}]

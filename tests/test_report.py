@@ -299,3 +299,54 @@ def test_two_runs_then_report_shows_trend(tmp_path):
         out, "specs", trend["series"][0]["input_file"])
     records = hist.load_history(history_file)
     assert hist.run_ids(records) == ["e1", "e2"]
+
+
+# ---------------------------------------------------------------------------
+# latency counters: verdict columns and the CDF page are strictly opt-in
+# ---------------------------------------------------------------------------
+
+def latency_run_dir(tmp_path):
+    """A serve-scope run whose records carry the latency meter's
+    counters (plus a plain r1 so the trend machinery has history)."""
+    results = tmp_path / "results"
+    run_dir = results / "r2"
+    run_dir.mkdir(parents=True)
+    doc1 = gb_doc("r1", {"serve/load/arrival:poisson": 2.2},
+                  date="2026-07-30T00:00:00")
+    doc2 = gb_doc("r2", {"serve/load/arrival:poisson": 2.0,
+                         "serve/load/arrival:bursty": 2.4})
+    for rec in doc2["benchmarks"]:
+        rec.update({"latency_p50_s": 0.010, "latency_p90_s": 0.020,
+                    "latency_p99_s": 0.050, "latency_p999_s": 0.090,
+                    "goodput_rps": 31.5, "slo_attainment": 1.0})
+    hist.append_run(str(results), doc1)
+    hist.append_run(str(results), doc2)
+    (run_dir / "merged.json").write_text(json.dumps(doc2, indent=2))
+    return run_dir
+
+
+def test_report_without_latency_counters_omits_latency_columns(tmp_path):
+    """The pre-latency report shape is untouched (the golden test pins
+    it byte-for-byte; this states the property directly)."""
+    run_dir = fixture_run_dir(tmp_path)
+    paths = generate_run_report(str(run_dir))
+    md = open(paths["md"]).read()
+    assert "p99 latency" not in md
+    assert "goodput" not in md
+    assert "latency" not in "".join(
+        os.listdir(os.path.join(str(run_dir), "report", "specs")))
+
+
+def test_report_with_latency_counters_adds_columns_and_cdf(tmp_path):
+    run_dir = latency_run_dir(tmp_path)
+    paths = generate_run_report(str(run_dir))
+    md = open(paths["md"]).read()
+    assert "| p99 latency | goodput |" in md
+    assert "31.5 req/s" in md
+    assert "serve_latency.png" in md
+    out = run_dir / "report"
+    assert (out / "serve_latency.png").exists()
+    assert (out / "specs" / "serve_latency.yaml").exists()
+    # the emitted spec is a real, re-renderable ScopePlot spec
+    for result in render_spec_dir(str(out / "specs"), force=True):
+        assert result[2] == "rendered", result

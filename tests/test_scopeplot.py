@@ -117,3 +117,71 @@ def test_cli_cat_filter(tmp_path, capsys):
     assert main(["cat", str(src), str(src)]) == 0
     out = json.loads(capsys.readouterr().out)
     assert len(out["benchmarks"]) == 6
+
+
+# ---------------------------------------------------------------------------
+# latency_cdf: tail-percentile counters -> one CDF line per record
+# ---------------------------------------------------------------------------
+
+LATENCY_DOC = {
+    "context": {"host_name": "h"},
+    "benchmarks": [
+        {"name": "serve/load/arrival:poisson",
+         "run_name": "serve/load/arrival:poisson", "run_type": "iteration",
+         "iterations": 1, "real_time": 5.0, "cpu_time": 5.0,
+         "time_unit": "us",
+         "latency_p50_s": 0.010, "latency_p90_s": 0.020,
+         "latency_p99_s": 0.050, "latency_p999_s": 0.090,
+         "ttft_p50_s": 0.004, "ttft_p99_s": 0.009},
+        {"name": "serve/load/arrival:bursty",
+         "run_name": "serve/load/arrival:bursty", "run_type": "iteration",
+         "iterations": 1, "real_time": 5.0, "cpu_time": 5.0,
+         "time_unit": "us",
+         "latency_p50_s": 0.012, "latency_p90_s": 0.030,
+         "latency_p99_s": 0.120, "latency_p999_s": 0.400},
+        {"name": "serve/load/no-latency-counters",
+         "run_name": "serve/load/no-latency-counters",
+         "run_type": "iteration", "iterations": 1, "real_time": 5.0,
+         "cpu_time": 5.0, "time_unit": "us"},
+    ],
+}
+
+
+def test_latency_cdf_renders_one_line_per_record(tmp_path):
+    src = tmp_path / "m.json"
+    src.write_text(json.dumps(LATENCY_DOC))
+    out = tmp_path / "cdf.png"
+    spec = {"title": "tails", "type": "latency_cdf", "output": str(out),
+            "series": [{"input_file": str(src), "regex": "serve/",
+                        "xscale": 1e3}]}
+    sp = tmp_path / "spec.yaml"
+    sp.write_text(yaml.safe_dump(spec))
+    loaded = load_spec(str(sp))
+    assert spec_dependencies(loaded) == [str(src)]
+    render_spec(loaded)
+    assert out.exists() and out.stat().st_size > 0
+
+
+def test_latency_cdf_log_tail_and_ttft_field(tmp_path):
+    """y_axis scale:log flips to a 1-q survival plot; field: ttft reads
+    the first-token grid instead (and records without it are skipped,
+    not crashed on)."""
+    src = tmp_path / "m.json"
+    src.write_text(json.dumps(LATENCY_DOC))
+    out = tmp_path / "ttft.png"
+    spec = {"title": "ttft tails", "type": "latency_cdf",
+            "output": str(out), "y_axis": {"scale": "log"},
+            "series": [{"input_file": str(src), "regex": "serve/",
+                        "field": "ttft"}]}
+    render_spec(spec, base_dir=str(tmp_path))
+    assert out.exists() and out.stat().st_size > 0
+
+
+def test_latency_cdf_is_a_known_spec_type(tmp_path):
+    from repro.scopeplot.plot import PLOT_TYPES
+    assert "latency_cdf" in PLOT_TYPES
+    sp = tmp_path / "bad.yaml"
+    sp.write_text(yaml.safe_dump({"title": "x", "type": "latency_cdff",
+                                  "output": "o.png", "series": []}))
+    with pytest.raises(Exception, match="latency_cdf"):
+        load_spec(str(sp))
