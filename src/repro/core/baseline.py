@@ -276,7 +276,10 @@ def load_document(path: str) -> Dict[str, Any]:
     fold into one synthetic document whose repetitions are the per-run
     means — so ``--baseline results/history.jsonl`` gates against the
     *windowed* history, catching slow drifts that each single-run diff
-    called similar."""
+    called similar.  When a ``history.db`` store index sits next to the
+    JSONL (:mod:`repro.store`), the history is read through it instead
+    of re-scanned — same records, same verdicts, O(new bytes) cost —
+    and any index problem silently falls back to the direct scan."""
     if path.endswith(".jsonl"):
         from .history import window_document
         return window_document(path)

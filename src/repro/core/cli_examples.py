@@ -93,6 +93,33 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
         ("print the rule catalog",
          "python -m repro lint --list-rules"),
     ],
+    "query": [
+        ("every bf16 record in the run history, as a table",
+         "python -m repro query --param dtype=bf16"),
+        ("per-instance statistics for one family: mean/stddev and "
+         "streaming P² percentiles over run means and counters",
+         "python -m repro query --family mxu/matmul --aggregate "
+         "--percentiles p50,p99,p999 --format json"),
+        ("one machine's records in a date range, as verbatim history "
+         "lines (byte-equivalent with or without the index)",
+         "python -m repro query --sysinfo 3f2a9c1d --since 2026-08-01 "
+         "--until 2026-08-07 --format jsonl"),
+        ("prove the index changes cost, not answers",
+         "python -m repro query --family mxu/matmul --no-store "
+         "--format jsonl"),
+    ],
+    "store": [
+        ("build/refresh the SQLite index (incremental: only bytes past "
+         "the watermark are read)",
+         "python -m repro store index --results-dir results"),
+        ("drop and re-index from scratch (byte-deterministic)",
+         "python -m repro store index --rebuild"),
+        ("merge two lab machines' history shards into this store, "
+         "deduplicating whole runs by (run-id, sysinfo digest)",
+         "python -m repro store ingest lab-a.jsonl lab-b.jsonl"),
+        ("index freshness, watermark and table counts",
+         "python -m repro store status --format json"),
+    ],
     "report": [
         ("render report/index.html + report.md for one run",
          "python -m repro report 20260731T120000-42"),
@@ -101,6 +128,9 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
         ("wider drift window, custom output directory",
          "python -m repro report 20260731T120000-42 --output /tmp/report "
          "--window 10"),
+        ("live dashboard over the result store: trend sparklines, drift "
+         "alerts, and JSON query endpoints next to the static report",
+         "python -m repro report history --serve --port 8000"),
     ],
 }
 

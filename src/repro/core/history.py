@@ -69,12 +69,23 @@ def history_path(results_dir: str) -> str:
     return os.path.join(results_dir, HISTORY_FILE)
 
 
-def load_history(path: str) -> List[Record]:
-    """Read a history file; a torn/garbage line is skipped, not fatal."""
-    out: List[Record] = []
-    with open(path) as f:
-        for lineno, line in enumerate(f, 1):
-            line = line.strip()
+def iter_lines(path: str):
+    """Yield ``(line text, record)`` for every valid record line.
+
+    The file is read as *bytes* and decoded per line: a fleet writer
+    killed mid-append can tear a line anywhere — including inside a
+    multi-byte UTF-8 sequence — and one torn tail must not poison every
+    later query or index build.  Undecodable, unparseable and non-record
+    lines are warned about and skipped, never raised.
+    """
+    with open(path, "rb") as f:
+        for lineno, raw in enumerate(f, 1):
+            try:
+                line = raw.decode("utf-8").strip()
+            except UnicodeDecodeError:
+                log.warning("%s:%d: skipping undecodable history line",
+                            path, lineno)
+                continue
             if not line:
                 continue
             try:
@@ -84,8 +95,52 @@ def load_history(path: str) -> List[Record]:
                             path, lineno)
                 continue
             if isinstance(rec, dict) and "name" in rec:
-                out.append(rec)
-    return out
+                yield line, rec
+
+
+def scan_history(path: str) -> List[Record]:
+    """Direct linear scan of a history file — torn/garbage lines are
+    skipped, not fatal.  This is the reference semantics the store
+    index (:mod:`repro.store.index`) must reproduce exactly."""
+    return [rec for _line, rec in iter_lines(path)]
+
+
+def load_history(path: str, store: bool = True) -> List[Record]:
+    """Read a history file; a torn/garbage line is skipped, not fatal.
+
+    When an SQLite index (``history.db``, :mod:`repro.store.index`)
+    sits next to the file, records come from it after a cheap
+    watermark refresh instead of a full re-parse — the store-backed
+    fast path behind ``compare --baseline results/history.jsonl``,
+    drift gating and the report's trend pages.  Any index problem
+    falls back to the direct scan (``store=False`` forces it); both
+    paths return identical records by construction.
+    """
+    if store:
+        records = _store_records(path)
+        if records is not None:
+            return records
+    return scan_history(path)
+
+
+def _store_records(path: str) -> Optional[List[Record]]:
+    """Records via the SQLite index, or None when there is no usable
+    index for ``path`` (no db next to it, stale, or unreadable)."""
+    if not path.endswith(".jsonl") or not os.path.exists(path):
+        return None
+    from repro.store.index import StoreStale, db_path, load_records
+    if not os.path.exists(db_path(path)):
+        return None
+    try:
+        return load_records(path)
+    except StoreStale as e:
+        log.warning("store index unusable (%s); scanning %s directly",
+                    e, path)
+    except Exception as e:  # noqa: BLE001 - a broken index must never
+        # break a read; the JSONL is the source of truth
+        log.warning("store index broken (%r); scanning %s directly",
+                    e, path)
+    return None
 
 
 def run_ids(records: Iterable[Record]) -> List[str]:

@@ -8,6 +8,7 @@ and one clean family per rule.
 from __future__ import annotations
 
 import ast
+import os
 from typing import Iterable
 
 from .framework import FamilyContext, FamilyRule, Finding, LintContext, \
@@ -200,6 +201,101 @@ class ManualTimeNeverReported(FamilyRule):
             return
         if not fam.analysis.calls_state_method("set_iteration_time"):
             yield self.finding(fam)
+
+
+#: AST cache for SCOPE109's package-tree scan, keyed by file path →
+#: (mtime, size, findings-data).  test suites run the linter dozens of
+#: times per process; re-parsing the whole package each pass would
+#: dominate the AST tier.
+_HISTORY_OPEN_CACHE: dict = {}
+
+#: Modules allowed to open history.jsonl directly: the store layer they
+#: implement IS the sanctioned access path.
+_HISTORY_OPEN_ALLOWED = ("core/history.py", "store/")
+
+
+def _history_open_sites(path: str) -> list:
+    """``(lineno, call text)`` for every ``open()`` whose argument
+    subtree contains a ``history.jsonl`` string literal, cached by
+    (mtime, size)."""
+    try:
+        st = os.stat(path)
+        key = (st.st_mtime_ns, st.st_size)
+    except OSError:
+        return []
+    cached = _HISTORY_OPEN_CACHE.get(path)
+    if cached is not None and cached[0] == key:
+        return cached[1]
+    sites: list = []
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            src = f.read()
+        tree = ast.parse(src)
+    except (OSError, SyntaxError, ValueError):
+        _HISTORY_OPEN_CACHE[path] = (key, sites)
+        return sites
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) \
+                or dotted_name(node.func) != "open":
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            hit = any(isinstance(sub, ast.Constant)
+                      and isinstance(sub.value, str)
+                      and "history.jsonl" in sub.value
+                      for sub in ast.walk(arg))
+            if hit:
+                sites.append((node.lineno,
+                              ast.get_source_segment(src, node)
+                              or "open(...)"))
+                break
+    _HISTORY_OPEN_CACHE[path] = (key, sites)
+    return sites
+
+
+@register_rule
+class DirectHistoryOpen(RegistryRule):
+    """``open("...history.jsonl")`` outside the sanctioned access layer.
+
+    ``repro.core.history`` and ``repro.store`` are the only modules
+    that may touch the history file directly: they own the corrupt-line
+    skip semantics, the append protocol, and the store index's
+    byte-offset watermark.  Any other call site re-opening the JSONL
+    by hand bypasses all three — it crashes on the torn/garbage lines
+    the sanctioned readers skip, and what it writes is invisible to the
+    index until a rebuild.
+    """
+
+    id = "SCOPE109"
+    severity = "warning"
+    title = ""
+    fix_hint = ("go through the store layer: repro.core.history "
+                "(iter_lines/load_history/append_run) or repro.store "
+                "(run_query/ingest_shards) — never open the JSONL "
+                "directly")
+
+    def check_registry(self, ctx: LintContext) -> Iterable[Finding]:
+        import repro
+        pkg_root = os.path.dirname(os.path.abspath(repro.__file__))
+        for dirpath, dirnames, filenames in os.walk(pkg_root):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__",)]
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, pkg_root).replace(os.sep, "/")
+                if rel.startswith(_HISTORY_OPEN_ALLOWED[1]) \
+                        or rel == _HISTORY_OPEN_ALLOWED[0]:
+                    continue
+                for lineno, call in _history_open_sites(path):
+                    yield self.finding(
+                        family=f"module:repro/{rel}",
+                        location=f"{path}:{lineno}",
+                        message=(
+                            f"{call} opens history.jsonl directly "
+                            f"outside repro.core.history/repro.store — "
+                            f"it bypasses the corrupt-line skip "
+                            f"semantics and the store index watermark"))
 
 
 #: Tunable-kernel entry points and their block-size knobs.  Call sites

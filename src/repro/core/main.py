@@ -7,6 +7,8 @@ Subcommands::
     python -m repro tune <family> [...]    # autotune a kernel's blocks
     python -m repro compare A.json B.json  # diff two result documents
     python -m repro report <run-id>        # HTML/Markdown run report
+    python -m repro query [filters...]     # filter/aggregate run history
+    python -m repro store <index|ingest|status>  # manage the result store
 
 Startup sequence mirrors the paper's run stage:
 
@@ -67,6 +69,11 @@ commands:
             winner as the kernel's tuned.json default
   compare   mean/stddev-aware diff of two result documents
   report    static HTML/Markdown report for a run or the run history
+            (--serve adds a live dashboard over the result store)
+  query     filter/aggregate the run history (store-indexed when
+            history.db exists; output equals a direct JSONL scan)
+  store     manage the SQLite result store: index (incremental),
+            ingest (merge fleet shards), status
 
 `python -m repro COMMAND --help` shows each command's flags and
 examples.  Start-here docs: README.md, docs/run-pipeline.md.
@@ -85,6 +92,12 @@ def main(argv: Optional[List[str]] = None,
     if argv and argv[0] == "report":
         from repro.scopeplot.report import report_main
         return report_main(argv[1:])
+    if argv and argv[0] == "query":
+        from repro.store.cli import query_main
+        return query_main(argv[1:])
+    if argv and argv[0] == "store":
+        from repro.store.cli import store_main
+        return store_main(argv[1:])
     if argv and argv[0] == "plan":
         return plan_main(argv[1:], scope_modules)
     if argv and argv[0] == "lint":

@@ -762,10 +762,11 @@ def build_report_parser() -> argparse.ArgumentParser:
                     "for one run or for the whole run history",
         epilog=epilog("report"),
         formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("run",
+    ap.add_argument("run", nargs="?", default=None,
                     help="run id under --results-dir, a run directory "
                          "path, or 'history' for the cross-run trend "
-                         "report")
+                         "report (optional with --serve: serve the "
+                         "dashboard without regenerating)")
     ap.add_argument("--results-dir", default="results",
                     help="where runs and history.jsonl live "
                          "(default: results)")
@@ -776,6 +777,16 @@ def build_report_parser() -> argparse.ArgumentParser:
                     help=f"runs pooled for drift detection "
                          f"(default {DEFAULT_WINDOW})")
     ap.add_argument("--title", default=None, help="override report title")
+    ap.add_argument("--serve", action="store_true",
+                    help="after rendering, serve a live dashboard over "
+                         "the result store: trend sparklines, drift "
+                         "alerts, JSON query endpoints, and the static "
+                         "report (repro.scopeplot.dashboard)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="dashboard bind address (default: %(default)s)")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="dashboard port (default: %(default)s; 0 picks "
+                         "a free one)")
     return ap
 
 
@@ -793,9 +804,16 @@ def _known_runs(results_dir: str) -> List[str]:
 
 
 def report_main(argv: Optional[List[str]] = None) -> int:
-    ns = build_report_parser().parse_args(argv)
+    ap = build_report_parser()
+    ns = ap.parse_args(argv)
+    if ns.run is None and not ns.serve:
+        ap.error("a run id (or 'history') is required unless --serve "
+                 "is given")
+    paths: Dict[str, str] = {}
     try:
-        if ns.run == "history":
+        if ns.run is None:
+            pass                    # --serve only: no regeneration
+        elif ns.run == "history":
             path = hist.history_path(ns.results_dir)
             if not os.path.exists(path):
                 print(f"error: no history file {path} (runs append to it "
@@ -826,6 +844,14 @@ def report_main(argv: Optional[List[str]] = None) -> int:
     except (OSError, json.JSONDecodeError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 1
-    print(paths["html"])
-    print(paths["md"])
+    if paths:
+        print(paths["html"])
+        print(paths["md"])
+    if ns.serve:
+        from .dashboard import serve_dashboard
+        report_dir = os.path.dirname(paths["html"]) if paths else (
+            ns.output or os.path.join(ns.results_dir, "report"))
+        return serve_dashboard(ns.results_dir, report_dir=report_dir,
+                               host=ns.host, port=ns.port,
+                               window=ns.window)
     return 0

@@ -53,17 +53,20 @@ def _parsers():
     from repro.core.main import build_plan_parser, build_run_parser
     from repro.core.tune import build_tune_parser
     from repro.scopeplot.report import build_report_parser
+    from repro.store.cli import build_query_parser, build_store_parser
     return {"run": build_run_parser(), "plan": build_plan_parser(),
             "tune": build_tune_parser(),
             "lint": build_lint_parser(),
             "compare": build_compare_parser(),
-            "report": build_report_parser()}
+            "report": build_report_parser(),
+            "query": build_query_parser(),
+            "store": build_store_parser()}
 
 
 def test_examples_cover_every_subcommand():
     from repro.core.cli_examples import EXAMPLES
     assert set(EXAMPLES) == {"run", "plan", "tune", "lint", "compare",
-                            "report"}
+                            "report", "query", "store"}
     assert all(EXAMPLES[k] for k in EXAMPLES)
 
 
@@ -99,7 +102,8 @@ def test_top_level_help(capsys):
     from repro.core.main import main
     assert main(["--help"]) == 0
     out = capsys.readouterr().out
-    for cmd in ("run", "plan", "tune", "lint", "compare", "report"):
+    for cmd in ("run", "plan", "tune", "lint", "compare", "report",
+                "query", "store"):
         assert cmd in out
     assert "examples:" in out
 

@@ -84,6 +84,27 @@ def test_torn_line_skipped(tmp_path):
     assert len(records) == 1 and records[0]["run_id"] == "r1"
 
 
+def test_corrupt_lines_skipped_not_raised(tmp_path):
+    """Complete-but-garbage lines (bad JSON, undecodable bytes, non-dict
+    JSON, records without a name) warn and skip — one bad write must
+    never take down every consumer of the whole history."""
+    d = str(tmp_path)
+    hist.append_run(d, make_doc("r1", {"s/a": 1.0}))
+    path = hist.history_path(d)
+    with open(path, "ab") as f:
+        f.write(b'{"run_id": "rX", "name": "s/a", "mean_s":\n')  # bad JSON
+        f.write(b"\xff\xfe garbage bytes \xff\n")           # undecodable
+        f.write(b'[1, 2, 3]\n')                             # not a dict
+        f.write(b'{"run_id": "rY"}\n')                      # no name
+        f.write(b'\n')                                      # blank
+    hist.append_run(d, make_doc("r2", {"s/a": 1.01}))
+    records = hist.load_history(path)
+    assert hist.run_ids(records) == ["r1", "r2"]
+    assert len(records) == 2
+    # scan and store-eligible loader agree on the surviving set
+    assert hist.scan_history(path) == records
+
+
 def test_window_document_pools_runs(tmp_path):
     d = str(tmp_path)
     for i, mean in enumerate([1.0, 1.1, 0.9, 1.0, 1.2, 1.05]):

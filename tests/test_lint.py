@@ -887,3 +887,50 @@ def test_scope108_builtin_meters_are_clean(no_body_runs):
     r = reg()
     _clean_family(r)
     assert "SCOPE108" not in rules_of(lint(r))
+
+
+# ---------------------------------------------------------------------------
+# SCOPE109 — direct open() of history.jsonl outside the store layer
+# ---------------------------------------------------------------------------
+
+def test_scope109_triggers_on_direct_history_open(no_body_runs, tmp_path,
+                                                  monkeypatch):
+    import repro
+    pkg = tmp_path / "fakepkg"
+    (pkg / "store").mkdir(parents=True)
+    (pkg / "core").mkdir()
+    (pkg / "__init__.py").write_text("")
+    # violation: a random module hand-opens the history file
+    (pkg / "rogue.py").write_text(
+        'import os\n'
+        'def peek(d):\n'
+        '    with open(os.path.join(d, "history.jsonl")) as f:\n'
+        '        return f.read()\n')
+    # sanctioned: the store layer and core/history.py may open it
+    (pkg / "store" / "index.py").write_text(
+        'def ok():\n    return open("results/history.jsonl")\n')
+    (pkg / "core" / "history.py").write_text(
+        'def ok():\n    return open("results/history.jsonl")\n')
+    # opening some *other* file is nobody's business
+    (pkg / "fine.py").write_text(
+        'def ok():\n    return open("notes.txt")\n')
+    monkeypatch.setattr(repro, "__file__", str(pkg / "__init__.py"))
+    r = reg()
+    _clean_family(r)
+    found = [f for f in lint(r, rules=["SCOPE109"]).findings
+             if f.rule == "SCOPE109"]
+    assert len(found) == 1
+    assert found[0].severity == "warning"
+    assert found[0].family == "module:repro/rogue.py"
+    assert "history.jsonl" in found[0].message
+    assert str(pkg / "rogue.py") in found[0].location
+
+
+def test_scope109_real_tree_is_clean(no_body_runs):
+    """The shipped package must satisfy its own rule: only
+    repro.core.history / repro.store touch the JSONL directly."""
+    r = reg()
+    _clean_family(r)
+    report = lint(r, rules=["SCOPE109"])
+    assert report.findings == []
+    assert report.rules_run == ["SCOPE109"]

@@ -1,0 +1,464 @@
+"""repro.store: the SQLite index mirrors history.jsonl exactly (parity,
+watermark increments, deterministic rebuilds, corruption fallbacks),
+ingest merges fleet shards with whole-run dedup, queries answer
+byte-identically with and without the index, and the CLIs drive it all."""
+import json
+import os
+import sqlite3
+
+import pytest
+
+from repro.core import history as hist
+from repro.core.quantile import percentile
+from repro.store import index as store_index
+from repro.store import query as store_query
+from repro.store.cli import query_main, store_main
+from repro.store.ingest import ingest_shards
+from repro.store.query import (QueryFilter, StreamStats, aggregate_records,
+                               parse_percentiles, run_query, scan_records,
+                               split_name)
+from test_history import make_doc
+
+
+@pytest.fixture
+def results(tmp_path):
+    """Three runs of three instances with counters, plus a tuner run."""
+    d = str(tmp_path)
+    for i, (bf16, f32) in enumerate([(1.0, 2.0), (1.02, 2.1),
+                                     (0.98, 1.9)]):
+        doc = make_doc(f"r{i}", {
+            "mxu/matmul/dtype:bf16/n:256": bf16,
+            "mxu/matmul/dtype:f32/n:256": f32,
+            "example/saxpy/1024": 0.5 + 0.1 * i,
+        }, date=f"2026-08-0{i + 1}T10:00:00")
+        for b in doc["benchmarks"]:
+            b["flops"] = 1e9 * (i + 1)
+        hist.append_run(d, doc)
+    hist.append_run(d, make_doc("t0", {"tune/matmul/bm:128": 0.9},
+                                date="2026-08-04T10:00:00"), tag="tune")
+    return d
+
+
+def hpath(results):
+    return hist.history_path(results)
+
+
+def all_lines(path):
+    return [line for line, _rec in hist.iter_lines(path)]
+
+
+# ---------------------------------------------------------------------------
+# index: watermark refresh, rebuild determinism, fallback semantics
+# ---------------------------------------------------------------------------
+
+def test_index_mirrors_scan_exactly(results):
+    path = hpath(results)
+    stats = store_index.refresh(path)
+    assert stats.usable and stats.watermark == os.path.getsize(path)
+    assert store_index.load_records(path) == hist.scan_history(path)
+    assert store_index.is_fresh(path)
+
+
+def test_incremental_refresh_equals_full_rebuild(results):
+    path = hpath(results)
+    first = store_index.refresh(path)
+    # append another run: the next refresh must consume only new bytes
+    hist.append_run(results, make_doc(
+        "r9", {"mxu/matmul/dtype:bf16/n:256": 1.01},
+        date="2026-08-05T10:00:00"))
+    second = store_index.refresh(path)
+    assert not second.rebuilt
+    assert second.indexed == 1                     # only the new record
+    assert second.watermark == os.path.getsize(path)
+    incremental = store_index.load_records(path)
+    store_index.rebuild(path)
+    assert store_index.load_records(path) == incremental
+    assert incremental == hist.scan_history(path)
+
+
+def test_rebuild_is_byte_deterministic(results, tmp_path):
+    path = hpath(results)
+    a = str(tmp_path / "a.db")
+    b = str(tmp_path / "b.db")
+    store_index.rebuild(path, db_file=a)
+    store_index.rebuild(path, db_file=b)
+    with open(a, "rb") as fa, open(b, "rb") as fb:
+        assert fa.read() == fb.read()
+
+
+def test_index_droppable_without_data_loss(results):
+    path = hpath(results)
+    store_index.refresh(path)
+    before = hist.load_history(path)
+    os.remove(store_index.db_path(path))
+    assert hist.load_history(path) == before       # JSONL is the truth
+    store_index.refresh(path)                      # and it comes back
+    assert hist.load_history(path) == before
+
+
+def test_truncated_file_triggers_rebuild(results):
+    path = hpath(results)
+    store_index.refresh(path)
+    lines = all_lines(path)
+    with open(path, "w") as f:
+        for line in lines[:3]:
+            f.write(line + "\n")
+    stats = store_index.refresh(path)
+    assert stats.rebuilt and stats.total == 3
+    assert store_index.load_records(path) == hist.scan_history(path)
+
+
+def test_replaced_file_triggers_rebuild(results):
+    path = hpath(results)
+    store_index.refresh(path)
+    # same size, different head bytes: the watermark would be a lie
+    lines = all_lines(path)
+    swapped = [lines[-1]] + lines[1:-1] + [lines[0]]
+    with open(path, "w") as f:
+        for line in swapped:
+            f.write(line + "\n")
+    stats = store_index.refresh(path)
+    assert stats.rebuilt
+    assert store_index.load_records(path) == hist.scan_history(path)
+
+
+def test_torn_tail_left_unconsumed_then_caught_up(results):
+    path = hpath(results)
+    store_index.refresh(path)
+    size_before = os.path.getsize(path)
+    with open(path, "a") as f:
+        f.write('{"run_id": "rT", "name": "s/x", "mea')     # torn write
+    stats = store_index.refresh(path)
+    assert stats.usable                  # unparseable tail: scan agrees
+    assert stats.watermark == size_before
+    # the writer finishes the line: next refresh consumes it
+    with open(path, "a") as f:
+        f.write('n_s": 1.0}\n')
+    stats = store_index.refresh(path)
+    assert stats.indexed == 1 and stats.watermark == os.path.getsize(path)
+    assert store_index.load_records(path) == hist.scan_history(path)
+
+
+def test_parseable_unterminated_tail_falls_back_to_scan(results):
+    """A complete record missing only its newline IS data the index
+    can't hold yet — the store must refuse rather than drop it."""
+    path = hpath(results)
+    store_index.refresh(path)
+    with open(path, "a") as f:
+        f.write('{"run_id": "rT", "name": "s/x", "mean_s": 1.0}')
+    with pytest.raises(store_index.StoreStale):
+        store_index.load_records(path)
+    # load_history silently degrades to the scan and still sees it
+    records = hist.load_history(path)
+    assert records == hist.scan_history(path)
+    assert records[-1]["run_id"] == "rT"
+
+
+def test_garbage_lines_skipped_with_watermark_advanced(results):
+    path = hpath(results)
+    with open(path, "ab") as f:
+        f.write(b'not json at all\n')
+        f.write(b'\xff\xfe garbage \n')
+    stats = store_index.refresh(path)
+    assert stats.usable and stats.skipped == 2
+    assert stats.watermark == os.path.getsize(path)
+    assert store_index.load_records(path) == hist.scan_history(path)
+
+
+def test_corrupt_db_falls_back_to_scan(results):
+    path = hpath(results)
+    store_index.refresh(path)
+    with open(store_index.db_path(path), "wb") as f:
+        f.write(b"this is not sqlite")
+    records = hist.load_history(path)
+    assert records == hist.scan_history(path)
+
+
+# ---------------------------------------------------------------------------
+# queries: store path byte-equivalent to the scan path
+# ---------------------------------------------------------------------------
+
+FILTERS = [
+    QueryFilter(),
+    QueryFilter(scope="mxu"),
+    QueryFilter(family="mxu/matmul"),
+    QueryFilter(name="example/saxpy/1024"),
+    QueryFilter(params={"dtype": ["bf16"]}),
+    QueryFilter(params={"dtype": ["bf16", "f32"]}),
+    QueryFilter(tag="tune"),
+    QueryFilter(tag=""),
+    QueryFilter(run_id="r1"),
+    QueryFilter(since="2026-08-02"),
+    QueryFilter(until="2026-08-02"),
+    QueryFilter(since="2026-08-02", until="2026-08-03",
+                family="mxu/matmul", params={"dtype": ["f32"]}),
+    QueryFilter(scope="nosuch"),
+]
+
+
+@pytest.mark.parametrize("flt", FILTERS, ids=lambda f: f.describe())
+def test_store_and_scan_paths_byte_equivalent(results, flt):
+    path = hpath(results)
+    store_index.refresh(path)
+    via_store = list(store_query._store_rows(path, flt))
+    via_scan = list(scan_records(path, flt))
+    assert via_store == via_scan                  # raw lines AND records
+
+
+def test_store_and_scan_agree_on_sysinfo_filter(results):
+    path = hpath(results)
+    digest = hist.scan_history(path)[0]["sysinfo"]
+    store_index.refresh(path)
+    flt = QueryFilter(sysinfo=digest)
+    assert list(store_query._store_rows(path, flt)) == \
+        list(scan_records(path, flt))
+    assert len(list(scan_records(path, flt))) > 0
+
+
+def test_run_query_auto_uses_index_only_when_present(results):
+    path = hpath(results)
+    flt = QueryFilter(params={"dtype": ["bf16"]})
+    # no db yet: auto must scan, not create one as a side effect
+    rows = list(run_query(path, flt))
+    assert not os.path.exists(store_index.db_path(path))
+    assert list(run_query(path, flt, use_store="always")) == rows
+    assert os.path.exists(store_index.db_path(path))
+    assert list(run_query(path, flt)) == rows
+    assert list(run_query(path, flt, use_store="never")) == rows
+
+
+def test_split_name_typed_and_legacy():
+    assert split_name("mxu/matmul/dtype:bf16/n:512") == \
+        ("mxu", "mxu/matmul")
+    assert split_name("example/saxpy/1024") == ("example", "example/saxpy")
+    assert split_name("comm/allreduce") == ("comm", "comm/allreduce")
+    assert split_name("solo") == ("solo", "solo")
+
+
+def test_parse_percentiles():
+    assert parse_percentiles("p50,p99,p999") == \
+        [("p50", 0.50), ("p99", 0.99), ("p999", 0.999)]
+    with pytest.raises(ValueError):
+        parse_percentiles("p0")
+    with pytest.raises(ValueError):
+        parse_percentiles("q50")
+    with pytest.raises(ValueError):
+        parse_percentiles("")
+
+
+# ---------------------------------------------------------------------------
+# streaming aggregation: Welford + P², pinned exact on small n
+# ---------------------------------------------------------------------------
+
+def test_streamstats_exact_below_five_samples():
+    samples = [3.0, 1.0, 4.0, 1.5]
+    st = StreamStats(parse_percentiles("p50,p90,p99"))
+    for v in samples:
+        st.add(v)
+    out = st.result()
+    assert out["n"] == 4
+    assert out["mean"] == pytest.approx(sum(samples) / 4)
+    assert out["min"] == 1.0 and out["max"] == 4.0
+    for label, q in [("p50", 0.50), ("p90", 0.90), ("p99", 0.99)]:
+        assert out[label] == pytest.approx(percentile(samples, q)), label
+
+
+def test_streamstats_matches_welford_reference():
+    import statistics
+    samples = [0.1 * i for i in range(1, 50)]
+    st = StreamStats()
+    for v in samples:
+        st.add(v)
+    assert st.mean == pytest.approx(statistics.fmean(samples))
+    assert st.stddev == pytest.approx(statistics.stdev(samples))
+
+
+def test_aggregate_records_pools_counters_and_runs(results):
+    path = hpath(results)
+    rows = run_query(path, QueryFilter(family="mxu/matmul"),
+                     use_store="never")
+    aggs = {a.name: a for a in
+            aggregate_records(rows, parse_percentiles("p50"))}
+    bf16 = aggs["mxu/matmul/dtype:bf16/n:256"]
+    assert bf16.records == 3 and bf16.runs == 3 and bf16.errors == 0
+    assert bf16.mean_s.result()["mean"] == pytest.approx(1.0, rel=0.05)
+    flops = bf16.counters["flops"].result()
+    assert flops["n"] == 3 and flops["mean"] == pytest.approx(2e9)
+    assert flops["p50"] == pytest.approx(percentile([1e9, 2e9, 3e9], 0.5))
+
+
+# ---------------------------------------------------------------------------
+# fleet ingest: whole-run dedup by (run_id, sysinfo)
+# ---------------------------------------------------------------------------
+
+def test_ingest_dedups_runs_across_shards(results, tmp_path):
+    path = hpath(results)
+    lines = all_lines(path)
+    before = len(lines)
+    shard_a = tmp_path / "lab-a.jsonl"
+    shard_b = tmp_path / "lab-b.jsonl"
+    # shard a: a known run (dup) + a new one; shard b repeats the new one
+    new_run = [json.dumps({"run_id": "fleet1", "ts": "2026-08-06T00:00:00",
+                           "name": "mxu/matmul/dtype:bf16/n:256",
+                           "mean_s": 1.0, "stddev_s": 0.0, "n": 1,
+                           "errors": 0, "sysinfo": "othermachine",
+                           "verdict": "new"})]
+    shard_a.write_text("\n".join([lines[0]] + new_run) + "\n")
+    shard_b.write_text("\n".join(new_run) + "\n")
+    stats = ingest_shards(results, [str(shard_a), str(shard_b)])
+    assert stats.appended == 1                     # new run landed once
+    assert stats.new_runs == [("fleet1", "othermachine")]
+    assert len(stats.duplicate_runs) == 2          # r0 + cross-shard dup
+    after = all_lines(path)
+    assert len(after) == before + 1
+    assert after[-1] == new_run[0]                 # appended verbatim
+    # re-ingesting is a no-op
+    again = ingest_shards(results, [str(shard_a), str(shard_b)])
+    assert again.appended == 0
+    assert len(all_lines(path)) == before + 1
+
+
+def test_ingest_same_run_id_different_machine_keeps_both(results,
+                                                         tmp_path):
+    path = hpath(results)
+    rec = dict(hist.scan_history(path)[0], sysinfo="machineB")
+    shard = tmp_path / "b.jsonl"
+    shard.write_text(json.dumps(rec) + "\n")
+    stats = ingest_shards(results, [str(shard)])
+    assert stats.appended == 1          # same run_id, different digest
+    assert stats.new_runs == [(rec["run_id"], "machineB")]
+
+
+def test_ingest_refreshes_index_incrementally(results, tmp_path):
+    path = hpath(results)
+    store_index.refresh(path)
+    shard = tmp_path / "s.jsonl"
+    shard.write_text(json.dumps(
+        {"run_id": "f2", "ts": "2026-08-07T00:00:00", "name": "s/x",
+         "mean_s": 1.0, "stddev_s": 0.0, "n": 1, "errors": 0,
+         "sysinfo": "m2", "verdict": "new"}) + "\n")
+    ingest_shards(results, [str(shard)])
+    assert store_index.is_fresh(path)
+    assert store_index.load_records(path) == hist.scan_history(path)
+
+
+# ---------------------------------------------------------------------------
+# the store fast path keeps verdicts identical
+# ---------------------------------------------------------------------------
+
+def test_compare_baseline_verdicts_unchanged_by_fast_path(results,
+                                                          capsys):
+    from repro.core.baseline import compare_documents, load_document
+    path = hpath(results)
+    contender = make_doc("new", {"mxu/matmul/dtype:bf16/n:256": 5.0,
+                                 "example/saxpy/1024": 0.7})
+    scan_doc = load_document(path)          # no index yet: scan path
+    scan_verdicts = {c.name: c.verdict for c in
+                     compare_documents(scan_doc, contender)}
+    store_index.refresh(path)
+    store_doc = load_document(path)         # index present: fast path
+    store_verdicts = {c.name: c.verdict for c in
+                      compare_documents(store_doc, contender)}
+    assert store_doc == scan_doc
+    assert store_verdicts == scan_verdicts
+    assert store_verdicts["mxu/matmul/dtype:bf16/n:256"] == "regression"
+
+
+def test_detect_drift_identical_through_store(results):
+    path = hpath(results)
+    records_scan = hist.load_history(path, store=False)
+    store_index.refresh(path)
+    records_store = hist.load_history(path)
+    assert records_store == records_scan
+    drift_a = hist.detect_drift(records_scan)
+    drift_b = hist.detect_drift(records_store)
+    assert [(c.name, c.verdict) for c in drift_a] == \
+        [(c.name, c.verdict) for c in drift_b]
+
+
+# ---------------------------------------------------------------------------
+# CLIs
+# ---------------------------------------------------------------------------
+
+def test_store_cli_index_status_roundtrip(results, capsys):
+    path = hpath(results)
+    assert store_main(["index", "--results-dir", results]) == 0
+    out = capsys.readouterr().out
+    assert "watermark" in out
+    assert store_main(["status", "--results-dir", results,
+                       "--format", "json"]) == 0
+    status = json.loads(capsys.readouterr().out)
+    assert status["fresh"] is True
+    assert status["records"] == len(hist.scan_history(path))
+    assert status["runs"] == 4
+    assert store_main(["index", "--results-dir", results,
+                       "--rebuild"]) == 0
+    assert "rebuilt" in capsys.readouterr().out
+
+
+def test_query_cli_jsonl_byte_equivalent(results, capsys):
+    store_index.refresh(hpath(results))
+    args = ["--results-dir", results, "--param", "dtype=bf16",
+            "--format", "jsonl"]
+    assert query_main(args) == 0
+    via_store = capsys.readouterr().out
+    assert query_main(args + ["--no-store"]) == 0
+    via_scan = capsys.readouterr().out
+    assert via_store == via_scan
+    assert len(via_store.splitlines()) == 3
+
+
+def test_query_cli_json_and_aggregate(results, capsys):
+    assert query_main(["--results-dir", results, "--family",
+                       "mxu/matmul", "--format", "json"]) == 0
+    recs = json.loads(capsys.readouterr().out)
+    assert len(recs) == 6
+    assert all(r["name"].startswith("mxu/matmul/") for r in recs)
+    assert query_main(["--results-dir", results, "--family", "mxu/matmul",
+                       "--aggregate", "--percentiles", "p50,p99",
+                       "--format", "json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["records"] == 6
+    by_name = {i["name"]: i for i in doc["instances"]}
+    agg = by_name["mxu/matmul/dtype:f32/n:256"]
+    assert agg["runs"] == 3
+    assert agg["mean_s"]["p50"] == pytest.approx(2.0)
+    assert agg["counters"]["flops"]["mean"] == pytest.approx(2e9)
+
+
+def test_query_cli_table_and_errors(results, capsys, tmp_path):
+    assert query_main(["--results-dir", results, "--tag", "tune"]) == 0
+    out = capsys.readouterr().out
+    assert "tune/matmul/bm:128" in out and "1 record(s)" in out
+    assert query_main(["--results-dir", str(tmp_path / "void")]) == 1
+    assert query_main(["--results-dir", results,
+                       "--param", "notkeyvalue"]) == 2
+    assert query_main(["--results-dir", results,
+                       "--percentiles", "zzz"]) == 2
+
+
+def test_store_cli_ingest(results, tmp_path, capsys):
+    shard = tmp_path / "other.jsonl"
+    shard.write_text(json.dumps(
+        {"run_id": "x1", "ts": "2026-08-08T00:00:00", "name": "s/y",
+         "mean_s": 2.0, "stddev_s": 0.0, "n": 1, "errors": 0,
+         "sysinfo": "mX", "verdict": "new"}) + "\n")
+    assert store_main(["ingest", "--results-dir", results,
+                       str(shard)]) == 0
+    assert "1 new run(s)" in capsys.readouterr().out
+    assert store_main(["ingest", "--results-dir", results,
+                       str(tmp_path / "missing.jsonl")]) == 1
+
+
+def test_query_store_sql_injection_safe(results):
+    """Filter values are bound parameters, never spliced into SQL."""
+    path = hpath(results)
+    store_index.refresh(path)
+    flt = QueryFilter(family="mxu'; DROP TABLE records; --")
+    assert list(store_query._store_rows(path, flt)) == []
+    con = sqlite3.connect(store_index.db_path(path))
+    try:
+        n = con.execute("SELECT COUNT(*) FROM records").fetchone()[0]
+    finally:
+        con.close()
+    assert n == len(hist.scan_history(path))
