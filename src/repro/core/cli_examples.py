@@ -41,6 +41,12 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
         ("lint pre-flight: abort before anything is timed if a family "
          "provably mismeasures",
          "python -m repro run --lint --strict --jobs 2"),
+        ("delta run: skip instances whose fingerprint (body/fixture/"
+         "kernel source, params, tuned artifact, jax version) already "
+         "has a measured record; replay them as cached",
+         "python -m repro run --since --results-dir results"),
+        ("delta run, but records older than Aug 1 don't count as fresh",
+         "python -m repro run --since 2026-08-01 --jobs 2"),
     ],
     "plan": [
         ("print every benchmark instance with its predicted cost and "
@@ -50,6 +56,20 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
          "python -m repro plan --jobs 4 --costs results/20260731T120000-42"),
         ("plan only one backend's instances of the typed spaces",
          "python -m repro plan --param backend=pallas"),
+        ("delta plan: print only what repro ci would re-measure now "
+         "(fingerprint-fresh instances are pruned)",
+         "python -m repro plan --since --results-dir results"),
+    ],
+    "ci": [
+        ("per-commit gate: delta-plan against history, re-measure only "
+         "fingerprint-stale instances, judge them against the pooled "
+         "window, exit 1 on regression",
+         "python -m repro ci --jobs 2 --results-dir results"),
+        ("full sweep (no delta pruning) with a stricter gate",
+         "python -m repro ci --full --threshold 0.05 --window 10"),
+        ("gate one scope's bf16 instances, skipping the report render",
+         "python -m repro ci --enable-scope mxu --param dtype=bf16 "
+         "--no-report"),
     ],
     "tune": [
         ("screen + hill-climb the matmul block space under a 16-trial "
@@ -119,6 +139,9 @@ EXAMPLES: Dict[str, List[Tuple[str, str]]] = {
          "python -m repro store ingest lab-a.jsonl lab-b.jsonl"),
         ("index freshness, watermark and table counts",
          "python -m repro store status --format json"),
+        ("per-scope fingerprint coverage: instances fresh vs stale vs "
+         "never-run on this machine",
+         "python -m repro store status --coverage"),
     ],
     "report": [
         ("render report/index.html + report.md for one run",

@@ -1,0 +1,421 @@
+"""Instance fingerprints — the identity key of incremental benchmarking.
+
+exaCB's premise is that a benchmark collection at scale must be
+*incremental*: re-measure an instance only when something that could
+change its number changed.  This module computes that "something" as a
+deterministic, environment-insensitive digest per benchmark instance:
+
+  * the family **body** and **fixture** source (captured at registration,
+    :mod:`repro.core.registry`), plus the ``set_sync`` fence source and
+    the canonical forms of the ``set_meters`` / ``set_tunable``
+    declarations;
+  * the instance's **canonical params JSON** (:meth:`Params.canonical`);
+  * the transitive ``repro.kernels.*`` **module sources** the family
+    imports (resolved from the import statements in the body/fixture
+    source — the mxu/nn scopes import their Pallas kernels inside the
+    fixture, so a kernel edit must re-measure every family driving it);
+  * the **active tuned.json artifact** for the family's tunable kernel
+    (:mod:`repro.kernels.tuning` — shipping new tuned blocks changes
+    what runs);
+  * the **jax / jaxlib versions** (an XLA upgrade re-measures everything).
+
+Nothing host-specific enters the digest — no paths, hostnames, env vars
+or timestamps — so the same checkout produces the same fingerprint on
+every machine; *machine* identity is the separate sysinfo digest
+(:func:`repro.core.sysinfo.context_digest`).  The pair (fingerprint,
+sysinfo) decides freshness: ``repro run --since`` and ``repro ci`` skip
+an instance when its current fingerprint already has a history record
+on this machine (docs/continuous-benchmarking.md).
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+import inspect
+import json
+import os
+import textwrap
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .benchmark import Benchmark, Params
+from .logging import get_logger
+
+log = get_logger("fingerprint")
+
+#: Bump when the digest recipe changes — old fingerprints then never
+#: match, so every instance re-measures once (safe, conservative).
+FINGERPRINT_VERSION = 1
+
+#: Package whose modules are treated as measured-code dependencies.
+KERNEL_PACKAGE = "repro.kernels"
+
+#: Hex digest length kept on history records (64 bits of sha256).
+DIGEST_LEN = 16
+
+# freshness classifications (coverage table, delta planning)
+FRESH = "fresh"      # latest record carries the current fingerprint
+STALE = "stale"      # recorded before, but under a different fingerprint
+NEVER = "never"      # no record for this instance on this machine
+
+
+def _sha(text: str) -> str:
+    return hashlib.sha256(text.encode("utf-8")).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# transitive repro.kernels.* source discovery
+# ---------------------------------------------------------------------------
+
+def _kernels_root() -> str:
+    """Filesystem root of the kernels package (no kernel import needed)."""
+    import repro
+    return os.path.join(os.path.dirname(os.path.abspath(repro.__file__)),
+                        "kernels")
+
+
+def _module_file(module: str) -> Optional[str]:
+    """Source file of a ``repro.kernels.*`` module, resolved on disk.
+
+    Pure path resolution — importing kernel modules here would pull JAX
+    into every fingerprint computation.
+    """
+    if module == KERNEL_PACKAGE:
+        rel: List[str] = []
+    elif module.startswith(KERNEL_PACKAGE + "."):
+        rel = module[len(KERNEL_PACKAGE) + 1:].split(".")
+    else:
+        return None
+    base = os.path.join(_kernels_root(), *rel)
+    for cand in (base + ".py", os.path.join(base, "__init__.py")):
+        if os.path.isfile(cand):
+            return cand
+    return None
+
+
+def _module_source(module: str) -> Optional[str]:
+    path = _module_file(module)
+    if path is None:
+        return None
+    try:
+        with open(path, encoding="utf-8") as f:
+            return f.read()
+    except OSError:
+        return None
+
+
+def _imports_of(source: str, package: str = "") -> List[str]:
+    """Absolute module names imported by ``source``.
+
+    ``package`` resolves relative imports (``from .ops import matmul``
+    inside ``repro.kernels.matmul`` → ``repro.kernels.matmul.ops``).
+    ``from X import Y`` contributes both ``X`` and ``X.Y`` — Y may be a
+    submodule (``from repro.kernels import matmul``) or a function; the
+    non-module candidate simply resolves to no file later.
+    """
+    try:
+        # function sources captured off a registry arrive indented
+        tree = ast.parse(textwrap.dedent(source))
+    except SyntaxError:
+        return []
+    out: List[str] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            out.extend(alias.name for alias in node.names)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                parts = package.split(".") if package else []
+                if node.level <= len(parts):
+                    base = ".".join(parts[:len(parts) - node.level + 1])
+                else:
+                    continue
+            else:
+                base = node.module or ""
+            if node.module and node.level:
+                base = f"{base}.{node.module}" if base else node.module
+            if base:
+                out.append(base)
+                out.extend(f"{base}.{alias.name}" for alias in node.names)
+    return out
+
+
+def kernel_dependencies(sources: Iterable[Optional[str]]) -> List[str]:
+    """Transitive ``repro.kernels.*`` modules reachable from ``sources``.
+
+    Seeds are import statements found in the given source texts (family
+    body and fixture); the closure follows imports *inside* the kernels
+    package (``ops.py`` → ``kernel.py`` → ``tuning``), so editing any
+    file a kernel is built from changes every dependent fingerprint.
+    Returns sorted module names.
+    """
+    seen: Dict[str, Optional[str]] = {}
+    frontier: List[Tuple[str, str]] = []   # (module, its package context)
+    for src in sources:
+        if not src:
+            continue
+        for mod in _imports_of(src):
+            if mod.startswith(KERNEL_PACKAGE):
+                frontier.append((mod, ""))
+    while frontier:
+        module, _pkg = frontier.pop()
+        if not module.startswith(KERNEL_PACKAGE) or module in seen:
+            continue
+        src = _module_source(module)
+        seen[module] = src
+        if src is None:
+            continue
+        path = _module_file(module) or ""
+        package = module if path.endswith("__init__.py") \
+            else module.rsplit(".", 1)[0]
+        for mod in _imports_of(src, package=package):
+            if mod.startswith(KERNEL_PACKAGE) and mod not in seen:
+                frontier.append((mod, package))
+    return sorted(m for m, src in seen.items() if src is not None)
+
+
+def _kernel_sources_digest(sources: Iterable[Optional[str]]) -> str:
+    parts = []
+    for module in kernel_dependencies(sources):
+        parts.append(f"{module}\n{_module_source(module) or ''}")
+    return _sha("\n\x00".join(parts)) if parts else ""
+
+
+# ---------------------------------------------------------------------------
+# per-family inputs
+# ---------------------------------------------------------------------------
+
+def _sync_source(bench: Benchmark) -> str:
+    """Source of the family's sync fence (``set_sync`` stores only the
+    callable, so derive the text here; a builtin/dynamic fence degrades
+    to its qualified name — still deterministic)."""
+    fn = bench.sync_fn
+    if fn is None:
+        return ""
+    try:
+        return inspect.getsource(fn)
+    except (OSError, TypeError):
+        return getattr(fn, "__qualname__", repr(type(fn).__name__))
+
+
+def _meters_canonical(bench: Benchmark) -> str:
+    if not bench.meters:
+        return ""
+    return json.dumps([m if isinstance(m, str) else type(m).__name__
+                       for m in bench.meters])
+
+
+def _tunable_canonical(bench: Benchmark) -> str:
+    t = bench.tunable
+    if t is None:
+        return ""
+    return json.dumps({
+        "kernel": t.kernel,
+        "space": sorted(p.canonical() for p in t.space.points()),
+        "instance": list(t.instance),
+    }, sort_keys=True)
+
+
+def _tuned_artifact(bench: Benchmark) -> str:
+    """Canonical JSON of the *active* tuned config for the family's
+    kernel ('' when untunable or no artifact is active).  Content-based:
+    where the artifact lives (``REPRO_TUNED_DIR``) never enters the
+    digest, what it says does."""
+    if bench.tunable is None:
+        return ""
+    from repro.kernels import tuning
+    try:
+        payload = tuning.load_tuned(bench.tunable.kernel)
+    except Exception:  # noqa: BLE001 - unreadable artifact == no artifact
+        payload = None
+    if not payload:
+        return ""
+    return json.dumps(payload, sort_keys=True, separators=(",", ":"))
+
+
+def _stack_versions() -> Dict[str, str]:
+    out = {"jax": "", "jaxlib": ""}
+    try:
+        import jax
+        out["jax"] = getattr(jax, "__version__", "")
+    except Exception:  # noqa: BLE001 - fingerprints must not require jax
+        return out
+    try:
+        import jaxlib
+        out["jaxlib"] = getattr(jaxlib, "__version__", "")
+    except Exception:  # noqa: BLE001
+        pass
+    return out
+
+
+def family_inputs(bench: Benchmark) -> Dict[str, str]:
+    """The labeled digest inputs of one family (docs/tests introspect
+    this to see *which* component moved a fingerprint)."""
+    versions = _stack_versions()
+    return {
+        "version": str(FINGERPRINT_VERSION),
+        "body": bench.source or f"<uncapturable:{bench.name}>",
+        "fixture": bench.fixture_source or "",
+        "sync": _sync_source(bench),
+        "meters": _meters_canonical(bench),
+        "tunable": _tunable_canonical(bench),
+        "kernels": _kernel_sources_digest([bench.source,
+                                           bench.fixture_source]),
+        "tuned": _tuned_artifact(bench),
+        "jax": versions["jax"],
+        "jaxlib": versions["jaxlib"],
+    }
+
+
+def family_digest(bench: Benchmark) -> str:
+    return _sha(json.dumps(family_inputs(bench), sort_keys=True))
+
+
+def instance_fingerprint(bench: Benchmark, params: Params,
+                         family_dig: Optional[str] = None) -> str:
+    """The fingerprint of one (family, parameter point) instance."""
+    family_dig = family_dig or family_digest(bench)
+    return _sha(f"{family_dig}:{params.canonical()}")[:DIGEST_LEN]
+
+
+def registry_fingerprints(benches: Sequence[Benchmark]
+                          ) -> Dict[str, str]:
+    """Instance name → fingerprint for every instance of ``benches``.
+
+    This is the map a run carries in its document context
+    (``context["fingerprints"]``) so history records stay reproducible
+    from the run artifacts alone.
+    """
+    out: Dict[str, str] = {}
+    for bench in benches:
+        fam = family_digest(bench)
+        for name, params in bench.instances():
+            out[name] = instance_fingerprint(bench, params, fam)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# freshness: fingerprints × history
+# ---------------------------------------------------------------------------
+
+def latest_measurements(records: Sequence[Dict[str, Any]],
+                        sysinfo: Optional[str] = None
+                        ) -> Dict[str, Dict[str, Any]]:
+    """Newest *measured* history record per instance name.
+
+    Replayed (``cached``) records and autotuning trials (``tag:
+    "tune"``) are not measurements of the current code — they never
+    refresh an instance.  ``sysinfo`` restricts to one machine/stack
+    digest (records from other machines can't vouch for this one).
+    """
+    out: Dict[str, Dict[str, Any]] = {}
+    for rec in records:
+        if rec.get("cached") or rec.get("tag") == "tune":
+            continue
+        if sysinfo is not None and rec.get("sysinfo") != sysinfo:
+            continue
+        name = rec.get("name")
+        if name:
+            out[name] = rec
+    return out
+
+
+def classify(fingerprint: str, rec: Optional[Dict[str, Any]],
+             since: str = "") -> str:
+    """FRESH / STALE / NEVER for one instance vs its latest record.
+
+    A record only counts as fresh when it actually measured something
+    (``mean_s`` present, no errors), its fingerprint matches, and — when
+    ``since`` is a non-empty ISO prefix — it is recent enough.
+    """
+    if rec is None:
+        return NEVER
+    if rec.get("fingerprint") != fingerprint:
+        return STALE
+    if rec.get("mean_s") is None or rec.get("errors"):
+        return STALE
+    if since and str(rec.get("ts", "")) < since:
+        return STALE
+    return FRESH
+
+
+def delta_split(plan_items: Sequence[Any], fingerprints: Dict[str, str],
+                records: Sequence[Dict[str, Any]], sysinfo: str,
+                since: str = ""
+                ) -> Tuple[List[Any], Dict[str, Dict[str, Any]]]:
+    """Split plan items into (to-run, cached) for a ``--since`` delta run.
+
+    ``cached`` maps instance_id → the latest history record vouching for
+    the skipped instance; the orchestrator materializes those into the
+    merged document as ``cached: true`` records so reports stay complete.
+    """
+    latest = latest_measurements(records, sysinfo=sysinfo)
+    pending: List[Any] = []
+    cached: Dict[str, Dict[str, Any]] = {}
+    for item in plan_items:
+        fp = fingerprints.get(item.name, "")
+        rec = latest.get(item.name)
+        if fp and classify(fp, rec, since=since) == FRESH:
+            cached[item.instance_id] = rec
+        else:
+            pending.append(item)
+    return pending, cached
+
+
+def registered_benches(scope_modules: Optional[List[str]] = None
+                       ) -> List[Benchmark]:
+    """Load + register the benchmark scopes; return every family.
+
+    The coverage consumers (``repro store status --coverage``, the
+    dashboard's ``/api/coverage``) run outside the normal run startup
+    sequence, so this replays its registration steps against the
+    process-global registry with default flag values.  Heavy (imports
+    JAX via the scope modules) — call lazily, cache the result.
+    """
+    from .hooks import HOOKS
+    from .registry import REGISTRY
+    from .scope import ScopeManager
+
+    REGISTRY.reset()
+    mgr = ScopeManager()
+    mgr.load(scope_modules)
+    rc = HOOKS.run_pre_parse()
+    if rc is None:
+        rc = HOOKS.run_post_parse()
+    if rc is not None:
+        raise RuntimeError(f"scope init hook requested exit ({rc})")
+    mgr.register_all()
+    return REGISTRY.all()
+
+
+def coverage(benches: Sequence[Benchmark],
+             records: Sequence[Dict[str, Any]],
+             sysinfo: Optional[str] = None) -> Dict[str, Any]:
+    """Per-scope freshness coverage — the ``repro store status
+    --coverage`` table and the dashboard's staleness panel.
+
+    ``sysinfo`` defaults to the newest record's digest (the machine the
+    history was last written from); with no records at all, everything
+    is ``never``.
+    """
+    if sysinfo is None:
+        for rec in reversed(records):
+            if rec.get("sysinfo"):
+                sysinfo = rec["sysinfo"]
+                break
+    latest = latest_measurements(records, sysinfo=sysinfo)
+    scopes: Dict[str, Dict[str, int]] = {}
+    stale_names: List[str] = []
+    for bench in benches:
+        fam = family_digest(bench)
+        row = scopes.setdefault(bench.scope,
+                                {FRESH: 0, STALE: 0, NEVER: 0})
+        for name, params in bench.instances():
+            fp = instance_fingerprint(bench, params, fam)
+            state = classify(fp, latest.get(name))
+            row[state] += 1
+            if state != FRESH:
+                stale_names.append(name)
+    totals = {k: sum(row[k] for row in scopes.values())
+              for k in (FRESH, STALE, NEVER)}
+    return {"sysinfo": sysinfo or "", "scopes": scopes, "totals": totals,
+            "instances": totals[FRESH] + totals[STALE] + totals[NEVER],
+            "pending": sorted(stale_names)}

@@ -213,6 +213,19 @@ def doc_counters(doc: Dict[str, Any]) -> Dict[str, Dict[str, float]]:
     return out
 
 
+def _cached_names(doc: Dict[str, Any]) -> set:
+    """Instance names whose every document record was materialized from
+    history (``cached: true``) rather than measured — a delta run's
+    skipped instances (repro.core.fingerprint)."""
+    measured, cached = set(), set()
+    for rec in doc.get("benchmarks", []):
+        name = rec.get("run_name") or rec.get("name", "")
+        if not name:
+            continue
+        (cached if rec.get("cached") else measured).add(name)
+    return cached - measured
+
+
 def _verdict(prev: Optional[Record], mean: Optional[float],
              stddev: float, n: int, threshold: float, sigmas: float
              ) -> Tuple[str, Optional[float]]:
@@ -265,6 +278,8 @@ def append_run(results_dir: str, doc: Dict[str, Any],
     from .baseline import collect_stats
     ctx = doc.get("context", {})
     run_id = run_id or ctx.get("run_id") or "run"
+    fingerprints = ctx.get("fingerprints") or {}
+    cached_names = _cached_names(doc)
     path = history_path(results_dir)
     prior: List[Record] = []
     if os.path.exists(path):
@@ -279,7 +294,7 @@ def append_run(results_dir: str, doc: Dict[str, Any],
     # environment starts its own series ("new")
     last: Dict[str, Record] = {}
     for r in prior:
-        if r.get("sysinfo") == digest:
+        if r.get("sysinfo") == digest and not r.get("cached"):
             last[r.get("name", "")] = r
 
     counters = doc_counters(doc)
@@ -296,6 +311,13 @@ def append_run(results_dir: str, doc: Dict[str, Any],
         }
         if tag:
             rec["tag"] = tag
+        if name in fingerprints:
+            rec["fingerprint"] = fingerprints[name]
+        if name in cached_names:
+            # a replayed (delta-skipped) instance: its mean is an echo of
+            # an older run, not a new measurement — drift pooling and
+            # delta freshness both ignore it
+            rec["cached"] = True
         if ratio is not None:
             rec["ratio"] = round(ratio, 6)
         if name in counters:
@@ -330,10 +352,14 @@ def window_document(source: Union[str, Sequence[Record]],
     Only records from one machine/stack configuration are folded:
     ``sysinfo`` selects the digest (default: the digest of the newest
     record), so a history shared across machines never pools
-    incomparable numbers into one baseline.
+    incomparable numbers into one baseline.  Replayed ``cached`` records
+    (a delta run's skipped instances) are excluded — pooling the same
+    mean twice would deflate the cross-run stddev and make the window
+    look artificially stable.
     """
     records = load_history(source) if isinstance(source, str) \
         else list(source)
+    records = [r for r in records if not r.get("cached")]
     if sysinfo is None and records:
         sysinfo = records[-1].get("sysinfo")
     if sysinfo is not None:
@@ -368,17 +394,29 @@ def detect_drift(records: Sequence[Record], window: int = DEFAULT_WINDOW,
     of runs looked "similar".  Empty when history holds fewer than two
     runs.  Prior runs from a different machine/stack (sysinfo digest)
     than the latest run are excluded from the window.
+
+    ``cached`` records are no-ops on both sides: a delta run
+    (``--since`` / ``repro ci``) re-measures only changed instances, so
+    drift is judged exactly on those — replayed records neither trigger
+    verdicts nor count skipped instances as "removed".
     """
     from .baseline import compare_documents
     ids = run_ids(records)
     if len(ids) < 2:
         return []
     latest = ids[-1]
-    latest_records = for_run(records, latest)
-    digest = latest_records[-1].get("sysinfo") if latest_records else None
-    base = window_document([r for r in records
-                            if r.get("run_id") != latest], window,
-                           sysinfo=digest)
+    all_latest = for_run(records, latest)
+    latest_records = [r for r in all_latest if not r.get("cached")]
+    if not latest_records:
+        return []                     # fully-cached run: nothing new
+    digest = latest_records[-1].get("sysinfo")
+    prior = [r for r in records if r.get("run_id") != latest]
+    if len(latest_records) < len(all_latest):
+        # a delta run: judge only what was re-measured — skipped
+        # instances are vouched for by their cached records, not missing
+        fresh_names = {r.get("name") for r in latest_records}
+        prior = [r for r in prior if r.get("name") in fresh_names]
+    base = window_document(prior, window, sysinfo=digest)
     contender = window_document(latest_records, window=1, sysinfo=digest)
     return compare_documents(base, contender,
                              threshold=threshold, sigmas=sigmas)

@@ -435,3 +435,97 @@ class HostClockInMeter(RegistryRule):
                                 f"timestamps, not read host clocks — "
                                 f"a self-read clock stamps enqueue "
                                 f"time under async dispatch"))
+
+
+@register_rule
+class MutableGlobalInBody(FamilyRule):
+    """Body reads module-level mutable state the fingerprint can't see.
+
+    The instance fingerprint (:mod:`repro.core.fingerprint`) hashes the
+    body/fixture *source*, the kernel modules it imports, the params,
+    the tuned artifact and the jax version — a module-level ``list`` /
+    ``dict`` / ``set`` the body reads at call time is none of those.
+    Mutate it between runs and two identical fingerprints time two
+    different workloads, so ``repro ci`` happily skips an instance
+    whose behavior changed.  Functions, classes, modules and constants
+    are fine (their definitions live in hashed source); only mutable
+    containers resolved from the body's globals — or an explicit
+    ``global`` statement — are flagged.
+    """
+
+    id = "SCOPE110"
+    severity = "warning"
+    title = ""
+    fix_hint = ("pass the value through the ParamSpace or build it in "
+                "the fixture (both are fingerprinted); if it is truly "
+                "constant, make it a scalar/tuple constant")
+
+    #: Containers whose in-place mutation is invisible to source hashes.
+    MUTABLE_TYPES = (list, dict, set, bytearray)
+
+    @staticmethod
+    def _local_names(func: ast.FunctionDef) -> set:
+        """Names bound inside ``func`` — assignments, loop targets,
+        comprehension vars, ``with ... as``, except aliases, args."""
+        names = {a.arg for a in func.args.args + func.args.kwonlyargs}
+        for extra in (func.args.vararg, func.args.kwarg):
+            if extra is not None:
+                names.add(extra.arg)
+        for node in ast.walk(func):
+            if isinstance(node, ast.Name) and isinstance(
+                    node.ctx, (ast.Store, ast.Del)):
+                names.add(node.id)
+            elif isinstance(node, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef, ast.ClassDef)):
+                if node is not func:
+                    names.add(node.name)
+            elif isinstance(node, ast.ExceptHandler) and node.name:
+                names.add(node.name)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                for alias in node.names:
+                    names.add((alias.asname
+                               or alias.name.split(".")[0]))
+        return names
+
+    def check_family(self, ctx: LintContext,
+                     fam: FamilyContext) -> Iterable[Finding]:
+        ana = fam.analysis
+        if not ana.analyzable():
+            return
+        body = ana.body
+        fn_globals = getattr(fam.bench.fn, "__globals__", None)
+        if fn_globals is None:
+            return
+        for node in ast.walk(body):
+            if isinstance(node, ast.Global):
+                yield self.finding(
+                    fam,
+                    message=(f"body declares `global "
+                             f"{', '.join(node.names)}` (line "
+                             f"{node.lineno}): state carried across "
+                             f"iterations through module globals is "
+                             f"invisible to the instance fingerprint, "
+                             f"so delta runs (`repro ci`) can replay a "
+                             f"changed workload as fresh"))
+        locals_ = self._local_names(body)
+        seen = set()
+        for node in ast.walk(body):
+            if not isinstance(node, ast.Name) \
+                    or not isinstance(node.ctx, ast.Load) \
+                    or node.id in locals_ or node.id in seen:
+                continue
+            if node.id not in fn_globals:
+                continue
+            value = fn_globals[node.id]
+            if isinstance(value, self.MUTABLE_TYPES):
+                seen.add(node.id)
+                yield self.finding(
+                    fam,
+                    message=(f"body reads module-level "
+                             f"{type(value).__name__} {node.id!r} "
+                             f"(line {node.lineno}): mutable state "
+                             f"outside the fingerprinted source — "
+                             f"mutating it changes the measurement "
+                             f"without changing the fingerprint, and "
+                             f"delta runs (`repro ci`) will skip the "
+                             f"instance as fresh"))

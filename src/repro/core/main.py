@@ -4,6 +4,7 @@ Subcommands::
 
     python -m repro [run] [flags...]       # run benchmarks (default)
     python -m repro plan [flags...]        # print the work plan + costs
+    python -m repro ci [flags...]          # incremental run + drift gate
     python -m repro tune <family> [...]    # autotune a kernel's blocks
     python -m repro compare A.json B.json  # diff two result documents
     python -m repro report <run-id>        # HTML/Markdown run report
@@ -34,8 +35,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
-from typing import List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from . import logging as scope_logging
 from .baseline import (compare_documents, compare_main, format_comparisons,
@@ -63,6 +65,10 @@ results, and render reports.
 commands:
   run       run benchmarks (the default when COMMAND is omitted)
   plan      print the work plan with predicted costs and worker bins
+  ci        continuous-benchmarking entrypoint: delta-plan against the
+            run history (only fingerprint-stale instances re-measure),
+            run, gate against windowed drift, report — exit 1 on
+            regression (docs/continuous-benchmarking.md)
   lint      static-analyze benchmark families for measurement-corrupting
             bugs (nothing runs, nothing is timed)
   tune      search a tunable family's kernel block space and ship the
@@ -100,6 +106,9 @@ def main(argv: Optional[List[str]] = None,
         return store_main(argv[1:])
     if argv and argv[0] == "plan":
         return plan_main(argv[1:], scope_modules)
+    if argv and argv[0] == "ci":
+        from .ci import ci_main
+        return ci_main(argv[1:], scope_modules)
     if argv and argv[0] == "lint":
         from .lint import lint_main
         return lint_main(argv[1:], scope_modules)
@@ -202,6 +211,16 @@ def build_run_parser() -> argparse.ArgumentParser:
     sel.add_argument("--resume", default=None, metavar="RUN_ID",
                      help="re-open <results-dir>/<RUN_ID> and run only the "
                           "instances whose shard is missing or failed")
+    sel.add_argument("--since", nargs="?", const="", default=None,
+                     metavar="ISO",
+                     help="delta run: skip instances whose current "
+                          "fingerprint (body/fixture/kernel source, "
+                          "params, tuned artifact, jax version) already "
+                          "has a measured history record on this "
+                          "machine; their latest records replay into "
+                          "the merged document as cached.  An optional "
+                          "ISO prefix bounds freshness (records older "
+                          "than it don't count)")
     sel.add_argument("--costs", default=None, metavar="PATH",
                      help="prior run directory or GB-JSON document used as "
                           "per-instance cost hints for LPT scheduling")
@@ -225,6 +244,33 @@ def _print_run_help(sel: argparse.ArgumentParser,
         argparse.ArgumentParser(prog="python -m repro run",
                                 add_help=False, usage=argparse.SUPPRESS))
     print(flag_parser.format_help())
+
+
+def _delta_cached(mgr, results_dir: str, pattern: str,
+                  param_filter: Optional[Dict[str, List[str]]],
+                  fingerprints: Dict[str, str], since: str
+                  ) -> Dict[str, Dict[str, Any]]:
+    """``--since`` delta split: instance_id → vouching history record.
+
+    Consults the run history (store fast path via
+    :func:`repro.core.history.load_history`, scan fallback) for this
+    machine's sysinfo digest; instances whose current fingerprint
+    already has a fresh measured record are returned for cached
+    materialization, the rest will execute.
+    """
+    from .fingerprint import delta_split
+    from .history import history_path, load_history
+    from .sysinfo import build_context, context_digest
+    hpath = history_path(results_dir)
+    records = load_history(hpath) if os.path.exists(hpath) else []
+    digest = context_digest(build_context())
+    plan = build_plan(mgr, REGISTRY, pattern, param_filter=param_filter)
+    pending, cached = delta_split(plan.items, fingerprints, records,
+                                  digest, since=since)
+    log.info("delta plan (--since%s): %d fresh (cached) / %d to run of "
+             "%d instance(s)", f" {since}" if since else "",
+             len(cached), len(pending), len(plan.items))
+    return cached
 
 
 def run_main(argv: List[str],
@@ -256,6 +302,14 @@ def run_main(argv: List[str],
         return 2
     if sel_ns.resume and sel_ns.shard_grain == "scope":
         log.error("--resume requires benchmark shard grain "
+                  "(drop --shard-grain scope)")
+        return 2
+    if sel_ns.since is not None and not sel_ns.results_dir:
+        log.error("--since requires --results-dir (the run history is "
+                  "the freshness source)")
+        return 2
+    if sel_ns.since is not None and sel_ns.shard_grain == "scope":
+        log.error("--since requires benchmark shard grain "
                   "(drop --shard-grain scope)")
         return 2
 
@@ -314,6 +368,16 @@ def run_main(argv: List[str],
     mgr.configure(disable=[name for name, _ in scope_worklist(mgr)
                            if name not in matched])
 
+    # fingerprints ride on every run's context so history records carry
+    # them (delta planning and coverage read them back)
+    from .fingerprint import registry_fingerprints
+    fingerprints = registry_fingerprints(benches)
+
+    cached = None
+    if sel_ns.since is not None:
+        cached = _delta_cached(mgr, sel_ns.results_dir, pattern,
+                               param_filter, fingerprints, sel_ns.since)
+
     opts = OrchestratorOptions(
         jobs=sel_ns.jobs,
         isolate=sel_ns.isolate,
@@ -332,9 +396,11 @@ def run_main(argv: List[str],
         run_id=sel_ns.resume or sel_ns.run_id,
         resume=bool(sel_ns.resume),
         cost_source=sel_ns.costs,
+        cached_results=cached,
     )
     result = execute(mgr, REGISTRY, opts,
-                     context_extra={"scopes": mgr.status()})
+                     context_extra={"scopes": mgr.status(),
+                                    "fingerprints": fingerprints})
     doc = result.doc
 
     out = FLAGS.get("benchmark_out")
@@ -379,6 +445,15 @@ def build_plan_parser() -> argparse.ArgumentParser:
                     metavar="KEY=VALUE",
                     help="plan only instances whose typed parameter KEY "
                          "equals VALUE (repeatable)")
+    ap.add_argument("--results-dir", default="results",
+                    help="history location --since consults "
+                         "(default: results)")
+    ap.add_argument("--since", nargs="?", const="", default=None,
+                    metavar="ISO",
+                    help="delta plan: drop instances whose current "
+                         "fingerprint already has a measured history "
+                         "record on this machine (optional ISO prefix "
+                         "bounds freshness)")
     return ap
 
 
@@ -424,21 +499,39 @@ def plan_main(argv: List[str],
                   f" with --param {ns.param}" if param_filter else "")
         return 1
 
-    bins = plan.bins(ns.jobs)
+    items = plan.items
+    n_cached = 0
+    if ns.since is not None:
+        from .fingerprint import registry_fingerprints
+        fingerprints = registry_fingerprints(REGISTRY.filter(
+            pattern, params=param_filter))
+        cached = _delta_cached(mgr, ns.results_dir, pattern, param_filter,
+                               fingerprints, ns.since)
+        items = [i for i in plan.items if i.instance_id not in cached]
+        n_cached = len(plan.items) - len(items)
+        if not items:
+            print(f"0 instance(s) to run; all {n_cached} "
+                  f"fingerprint-fresh (--since)")
+            return 0
+
+    bins = plan.bins(ns.jobs, items)
     bin_of = {item.instance_id: k
               for k, b in enumerate(bins) for item in b}
-    width = max(len(i.name) for i in plan.items)
+    width = max(len(i.name) for i in items)
     print(f"{'instance':<{width}}  {'cost_s':>9}  {'hint':>5}  bin  "
           f"instance_id")
-    for item in plan.items:
+    for item in items:
         hint = "prior" if item.cost is not None else "def"
         print(f"{item.name:<{width}}  {plan.cost_of(item):>9.4f}  "
               f"{hint:>5}  {bin_of[item.instance_id]:>3d}  "
               f"{item.instance_id}")
     loads = [sum(plan.cost_of(i) for i in b) for b in bins]
-    print(f"\n{len(plan.items)} instance(s) across {len(bins)} worker "
-          f"bin(s); predicted total {plan.total_cost():.2f}s, "
-          f"makespan {max(loads):.2f}s")
+    cached_note = (f" ({n_cached} fingerprint-fresh instance(s) pruned "
+                   f"by --since)" if n_cached else "")
+    print(f"\n{len(items)} instance(s) across {len(bins)} worker "
+          f"bin(s); predicted total "
+          f"{sum(plan.cost_of(i) for i in items):.2f}s, "
+          f"makespan {max(loads):.2f}s{cached_note}")
     return 0
 
 

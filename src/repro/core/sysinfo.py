@@ -14,10 +14,15 @@ import hashlib
 import json
 import os
 import platform
+import types
 from typing import Any, Dict, Optional
 
 # Target-hardware constants (TPU v5e) used by the modeled scopes & roofline.
-TPU_V5E = {
+# Immutable on purpose: benchmark bodies read these at call time, and the
+# instance fingerprint (repro.core.fingerprint) only hashes source — a
+# mutable table here could change measurements without changing digests
+# (the SCOPE110 hazard).
+TPU_V5E = types.MappingProxyType({
     "name": "tpu_v5e",
     "peak_bf16_flops": 197e12,     # FLOP/s per chip
     "hbm_bandwidth": 819e9,        # B/s per chip
@@ -27,7 +32,7 @@ TPU_V5E = {
     "vmem_bytes": 128 * 2 ** 20,   # ~128 MiB VMEM per core
     "mxu_shape": (128, 128),       # systolic array tile
     "dcn_bandwidth": 25e9,         # B/s per host cross-pod (modeled)
-}
+})
 
 
 def _cpu_info() -> Dict[str, Any]:

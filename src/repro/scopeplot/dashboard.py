@@ -111,6 +111,7 @@ class Dashboard:
         self.report_dir = os.path.abspath(report_dir) if report_dir \
             else None
         self.window = window
+        self._coverage: Optional[Dict[str, Any]] = None
 
     # -- data ------------------------------------------------------------
 
@@ -157,6 +158,30 @@ class Dashboard:
                              "new_time": c.new_time, "ratio": c.ratio,
                              "verdict": c.verdict} for c in comps],
         }
+
+    def coverage(self) -> Dict[str, Any]:
+        """Fingerprint freshness per scope (fresh/stale/never-run).
+
+        Enumerating the registry imports every scope module (and with
+        them JAX + the Pallas kernels), so the result is computed once
+        per server lifetime and cached; ``?refresh=1`` invalidates.
+        Failures degrade to ``{"error": ...}`` — the dashboard must
+        keep serving trends on a box that can't import the kernels.
+        """
+        if self._coverage is None:
+            try:
+                from repro.core.fingerprint import (coverage,
+                                                    registered_benches)
+                from repro.core.sysinfo import build_context, \
+                    context_digest
+                benches = registered_benches()
+                self._coverage = coverage(
+                    benches, self.records(),
+                    sysinfo=context_digest(build_context()))
+            except Exception as e:  # noqa: BLE001 - degrade, don't 500
+                log.warning("coverage unavailable: %s", e)
+                self._coverage = {"error": str(e)}
+        return self._coverage
 
     def query(self, qs: Dict[str, List[str]]) -> Dict[str, Any]:
         def one(key: str) -> Optional[str]:
@@ -216,6 +241,30 @@ class Dashboard:
                     f"{e(c['verdict'])}</td></tr>")
             out.append("</table>")
 
+        cov = self._coverage      # panel only if already computed
+        if cov is not None and "scopes" in cov:
+            t = cov.get("totals", {})
+            out.append(f"<h2>Staleness (machine <code>"
+                       f"{e((cov.get('sysinfo') or '')[:12])}</code>)"
+                       f"</h2>")
+            out.append("<table><tr><th>scope</th><th>fresh</th>"
+                       "<th>stale</th><th>never run</th></tr>")
+            for scope in sorted(cov["scopes"]):
+                row = cov["scopes"][scope]
+                warn = " class='warn'" if (row.get("stale") or
+                                           row.get("never")) else ""
+                out.append(
+                    f"<tr><td><code>{e(scope)}</code></td>"
+                    f"<td class='num'>{row.get('fresh', 0)}</td>"
+                    f"<td class='num'{warn}>{row.get('stale', 0)}</td>"
+                    f"<td class='num'{warn}>{row.get('never', 0)}</td>"
+                    f"</tr>")
+            out.append(f"</table><p>{t.get('fresh', 0)} of "
+                       f"{cov.get('instances', 0)} instance(s) are "
+                       f"fingerprint-fresh; a delta run "
+                       f"(<code>repro ci</code>) would re-measure "
+                       f"{t.get('stale', 0) + t.get('never', 0)}.</p>")
+
         out.append("<h2>Runs</h2>")
         if runs:
             out.append("<table><tr><th>run</th><th>timestamp</th>"
@@ -261,6 +310,7 @@ class Dashboard:
         links = ["<a href='/api/runs'>/api/runs</a>",
                  "<a href='/api/drift'>/api/drift</a>",
                  "<a href='/api/status'>/api/status</a>",
+                 "<a href='/api/coverage'>/api/coverage</a>",
                  "<a href='/api/query?aggregate=1'>/api/query</a>"]
         if self.report_dir and os.path.isdir(self.report_dir):
             links.insert(0, "<a href='/report/index.html'>static "
@@ -335,6 +385,10 @@ class DashboardHandler(BaseHTTPRequestHandler):
                 self._json(self.dash.drift(self.dash.records(), window))
             elif url.path == "/api/query":
                 self._json(self.dash.query(qs))
+            elif url.path == "/api/coverage":
+                if (qs.get("refresh") or [""])[0] in ("1", "true"):
+                    self.dash._coverage = None
+                self._json(self.dash.coverage())
             elif url.path == "/api/status":
                 self._json(store_status(self.dash.history_file))
             elif url.path.startswith("/report/"):

@@ -65,6 +65,10 @@ def build_query_parser() -> argparse.ArgumentParser:
                     help="only records with this tag ('' for untagged)")
     ap.add_argument("--run-id", default=None,
                     help="only records of this run")
+    ap.add_argument("--fingerprint", default=None, metavar="DIGEST",
+                    help="only records carrying this instance "
+                         "fingerprint (repro.core.fingerprint; "
+                         "docs/continuous-benchmarking.md)")
     ap.add_argument("--since", default=None, metavar="ISO",
                     help="only records at/after this ISO timestamp "
                          "prefix (e.g. 2026-08-01)")
@@ -151,7 +155,7 @@ def query_main(argv: List[str]) -> int:
     flt = QueryFilter(scope=ns.scope, family=ns.family, name=ns.name,
                       params=params or None, sysinfo=ns.sysinfo,
                       tag=ns.tag, run_id=ns.run_id, since=ns.since,
-                      until=ns.until)
+                      until=ns.until, fingerprint=ns.fingerprint)
     rows = run_query(history, flt,
                      use_store="never" if ns.no_store else "auto")
 
@@ -219,6 +223,12 @@ def build_store_parser() -> argparse.ArgumentParser:
     _add_source_args(st)
     st.add_argument("--format", default="table",
                     choices=["table", "json"])
+    st.add_argument("--coverage", action="store_true",
+                    help="also load the benchmark scopes and report "
+                         "per-scope fingerprint coverage: instances "
+                         "whose latest record is fresh (current "
+                         "fingerprint), stale (code/params/tuned/stack "
+                         "changed since) or never-run on this machine")
     return ap
 
 
@@ -262,12 +272,50 @@ def store_main(argv: List[str]) -> int:
 
     # status
     info = store_index.store_status(history)
+    if ns.coverage:
+        info["coverage"] = _coverage_info(history)
     if ns.format == "json":
         print(json.dumps(info, indent=2, sort_keys=True))
         return 0
     for key in ("history", "history_bytes", "db", "exists", "fresh",
                 "watermark", "schema_version", "records", "runs",
-                "counters", "machines"):
+                "counters", "machines", "fingerprints"):
         if key in info:
             print(f"{key:15s} {info[key]}")
+    if "coverage" in info:
+        print()
+        print(format_coverage(info["coverage"]))
     return 0
+
+
+def _coverage_info(history: str) -> dict:
+    """Fingerprint coverage vs the registered benchmark suite.
+
+    Loads the scope modules (the heavy part — JAX), so it only runs
+    behind ``--coverage``; any load/fingerprint failure degrades to an
+    ``error`` field rather than breaking plain status output.
+    """
+    from repro.core.fingerprint import coverage, registered_benches
+    from repro.core.history import load_history
+    try:
+        benches = registered_benches()
+        records = load_history(history) if os.path.exists(history) else []
+        return coverage(benches, records)
+    except Exception as e:  # noqa: BLE001 - diagnostics, not a gate
+        return {"error": f"{type(e).__name__}: {e}"}
+
+
+def format_coverage(cov: dict) -> str:
+    """Render one coverage dict as the status table section."""
+    if "error" in cov:
+        return f"coverage unavailable: {cov['error']}"
+    lines = [f"coverage (sysinfo {cov.get('sysinfo') or '-'}):",
+             f"{'scope':<16}  {'fresh':>6}  {'stale':>6}  {'never':>6}"]
+    for scope in sorted(cov.get("scopes", {})):
+        row = cov["scopes"][scope]
+        lines.append(f"{scope:<16}  {row['fresh']:>6d}  "
+                     f"{row['stale']:>6d}  {row['never']:>6d}")
+    t = cov.get("totals", {})
+    lines.append(f"{'total':<16}  {t.get('fresh', 0):>6d}  "
+                 f"{t.get('stale', 0):>6d}  {t.get('never', 0):>6d}")
+    return "\n".join(lines)

@@ -43,7 +43,8 @@ from repro.core.logging import get_logger
 log = get_logger("store")
 
 DB_FILE = "history.db"
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2      # v2: fingerprint + cached columns (repro ci);
+#                         v1 databases rebuild from the JSONL on first touch
 
 #: Bytes of the JSONL head fingerprinted to detect file replacement.
 _HEAD_SPAN = 512
@@ -68,6 +69,8 @@ CREATE TABLE IF NOT EXISTS records (
     n INTEGER,
     errors INTEGER,
     verdict TEXT NOT NULL DEFAULT '',
+    fingerprint TEXT NOT NULL DEFAULT '',
+    cached INTEGER NOT NULL DEFAULT 0,
     raw TEXT NOT NULL
 );
 CREATE INDEX IF NOT EXISTS idx_records_name ON records(name);
@@ -76,6 +79,8 @@ CREATE INDEX IF NOT EXISTS idx_records_family ON records(family);
 CREATE INDEX IF NOT EXISTS idx_records_run ON records(run_id);
 CREATE INDEX IF NOT EXISTS idx_records_sysinfo ON records(sysinfo);
 CREATE INDEX IF NOT EXISTS idx_records_ts ON records(ts);
+CREATE INDEX IF NOT EXISTS idx_records_fingerprint
+    ON records(fingerprint);
 CREATE TABLE IF NOT EXISTS runs (
     run_id TEXT NOT NULL,
     sysinfo TEXT NOT NULL,
@@ -189,6 +194,8 @@ def record_columns(rec: Dict[str, Any]) -> Dict[str, Any]:
         "n": rec.get("n"),
         "errors": rec.get("errors"),
         "verdict": rec.get("verdict", "") or "",
+        "fingerprint": rec.get("fingerprint", "") or "",
+        "cached": 1 if rec.get("cached") else 0,
     }
 
 
@@ -197,9 +204,11 @@ def _insert_record(con: sqlite3.Connection, rec: Dict[str, Any],
     cols = record_columns(rec)
     cur = con.execute(
         "INSERT INTO records(run_id, name, scope, family, params, "
-        "sysinfo, tag, ts, mean_s, stddev_s, n, errors, verdict, raw) "
+        "sysinfo, tag, ts, mean_s, stddev_s, n, errors, verdict, "
+        "fingerprint, cached, raw) "
         "VALUES(:run_id, :name, :scope, :family, :params, :sysinfo, "
-        ":tag, :ts, :mean_s, :stddev_s, :n, :errors, :verdict, :raw)",
+        ":tag, :ts, :mean_s, :stddev_s, :n, :errors, :verdict, "
+        ":fingerprint, :cached, :raw)",
         dict(cols, raw=raw))
     rid = cur.lastrowid
     counters = rec.get("counters")
@@ -383,6 +392,9 @@ def store_status(history_file: str, db_file: Optional[str] = None
                     f"SELECT COUNT(*) FROM {table}").fetchone()[0]
             out["machines"] = con.execute(
                 "SELECT COUNT(DISTINCT sysinfo) FROM runs").fetchone()[0]
+            out["fingerprints"] = con.execute(
+                "SELECT COUNT(DISTINCT fingerprint) FROM records "
+                "WHERE fingerprint != ''").fetchone()[0]
         except sqlite3.Error:
             out["fresh"] = False
         finally:

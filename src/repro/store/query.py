@@ -100,11 +100,12 @@ class QueryFilter:
     run_id: Optional[str] = None
     since: Optional[str] = None           # ISO prefix, inclusive
     until: Optional[str] = None           # ISO prefix, inclusive
+    fingerprint: Optional[str] = None     # instance fingerprint digest
 
     def describe(self) -> str:
         parts = []
         for key in ("scope", "family", "name", "sysinfo", "tag",
-                    "run_id", "since", "until"):
+                    "run_id", "since", "until", "fingerprint"):
             v = getattr(self, key)
             if v is not None:
                 parts.append(f"{key}={v}")
@@ -129,6 +130,9 @@ def match_record(rec: Record, flt: QueryFilter) -> bool:
     if flt.tag is not None and (rec.get("tag") or "") != flt.tag:
         return False
     if flt.run_id is not None and rec.get("run_id", "") != flt.run_id:
+        return False
+    if flt.fingerprint is not None \
+            and (rec.get("fingerprint") or "") != flt.fingerprint:
         return False
     ts = rec.get("ts", "") or ""
     if flt.since is not None and ts < flt.since:
@@ -161,7 +165,8 @@ def _store_rows(history_file: str, flt: QueryFilter) -> Iterator[Row]:
     where, args = ["1=1"], []
     for col, val in (("scope", flt.scope), ("family", flt.family),
                      ("name", flt.name), ("sysinfo", flt.sysinfo),
-                     ("tag", flt.tag), ("run_id", flt.run_id)):
+                     ("tag", flt.tag), ("run_id", flt.run_id),
+                     ("fingerprint", flt.fingerprint)):
         if val is not None:
             where.append(f"{col} = ?")
             args.append(val)

@@ -1,0 +1,180 @@
+"""End-to-end continuous benchmarking: `repro run --since` delta runs
+replay fresh instances as cached while keeping documents complete,
+editing one family re-plans exactly that family, and `repro ci` gates
+(exit 1) on an injected regression."""
+import importlib
+import json
+import os
+import sys
+
+import pytest
+
+from repro.core import history as hist
+from repro.core.ci import ci_main
+from repro.core.main import plan_main, run_main
+from repro.core.registry import REGISTRY
+
+SCOPE_TEMPLATE = '''\
+from repro.core import Scope, State, benchmark
+
+
+def _register(registry):
+    @benchmark(scope="tmpci", registry=registry)
+    def alpha(state):
+        """{alpha_doc}"""
+        x = 0.0
+        while state.keep_running():
+            x = state.deliver(x + 1.0)
+        state.set_items_processed(1)
+    alpha.set_sync(lambda ctx: None)
+
+    @benchmark(scope="tmpci", registry=registry)
+    def beta(state):
+        y = 0.0
+        while state.keep_running():
+            {beta_line}
+        state.set_items_processed(1)
+    beta.set_sync(lambda ctx: None)
+
+
+SCOPE = Scope(name="tmpci", register=_register)
+'''
+
+BETA_FAST = "y = state.deliver(y + 2.0)"
+BETA_SLOW = ("y = state.deliver(sum(float(i) for i in range(20000)))")
+
+MODNAME = "tmpci_scope_mod"
+FAST_FLAGS = ["--benchmark_min_time", "0.002"]
+
+
+@pytest.fixture
+def scope_file(tmp_path, monkeypatch):
+    """A throwaway scope module the tests can rewrite + reload."""
+    path = tmp_path / f"{MODNAME}.py"
+    path.write_text(SCOPE_TEMPLATE.format(alpha_doc="v1",
+                                          beta_line=BETA_FAST))
+    monkeypatch.syspath_prepend(str(tmp_path))
+    yield path
+    sys.modules.pop(MODNAME, None)
+
+
+def rewrite(path, alpha_doc="v1", beta_line=BETA_FAST):
+    path.write_text(SCOPE_TEMPLATE.format(alpha_doc=alpha_doc,
+                                          beta_line=beta_line))
+    importlib.reload(sys.modules[MODNAME])
+
+
+def cli(fn, argv):
+    REGISTRY.reset()              # run/ci register into the global registry
+    return fn(argv, scope_modules=[MODNAME])
+
+
+def run_args(d, run_id, *extra):
+    return ["--results-dir", d, "--run-id", run_id,
+            "--shard-grain", "benchmark", *extra, *FAST_FLAGS]
+
+
+def merged(d, run_id):
+    with open(os.path.join(d, run_id, "merged.json")) as f:
+        return json.load(f)
+
+
+def split_cached(doc):
+    recs = [b for b in doc["benchmarks"] if b["run_type"] == "iteration"]
+    live = sorted(b["name"] for b in recs if not b.get("cached"))
+    cached = sorted(b["name"] for b in recs if b.get("cached"))
+    return live, cached
+
+
+def test_delta_run_skips_fresh_and_stays_complete(scope_file, tmp_path,
+                                                  capsys):
+    d = str(tmp_path / "results")
+
+    assert cli(run_main, run_args(d, "full")) == 0
+    live, cached = split_cached(merged(d, "full"))
+    assert live == ["tmpci/alpha", "tmpci/beta"] and cached == []
+    records = hist.load_history(hist.history_path(d))
+    assert all(len(r.get("fingerprint", "")) == 16 for r in records)
+
+    # unchanged tree: --since plans zero instances, replays everything
+    assert cli(run_main, run_args(d, "noop", "--since")) == 0
+    live, cached = split_cached(merged(d, "noop"))
+    assert live == [] and cached == ["tmpci/alpha", "tmpci/beta"]
+    by_name = {b["name"]: b for b in merged(d, "noop")["benchmarks"]}
+    assert by_name["tmpci/alpha"]["cached_from_run"] == "full"
+
+    # the plan view agrees without running anything
+    assert cli(plan_main, ["--since", "--results-dir", d]) == 0
+    assert "fingerprint-fresh (--since)" in capsys.readouterr().out
+
+    # cached replays land in history but marked, and never vouch again
+    records = hist.load_history(hist.history_path(d))
+    noop = [r for r in records if r["run_id"] == "noop"]
+    assert len(noop) == 2 and all(r["cached"] for r in noop)
+
+    # edit ONE family body → exactly that family re-measures
+    rewrite(scope_file, alpha_doc="v2")
+    assert cli(run_main, run_args(d, "delta", "--since")) == 0
+    live, cached = split_cached(merged(d, "delta"))
+    assert live == ["tmpci/alpha"] and cached == ["tmpci/beta"]
+
+
+def test_since_requires_results_dir_and_instance_grain(scope_file):
+    # an ephemeral run (--results-dir '') has no history to consult
+    assert cli(run_main, ["--since", "--results-dir", "",
+                          *FAST_FLAGS]) == 2
+    assert cli(run_main, ["--since", "--results-dir", "x",
+                          "--shard-grain", "scope", *FAST_FLAGS]) == 2
+
+
+def test_since_iso_floor_re_measures_old_records(scope_file, tmp_path):
+    d = str(tmp_path / "results")
+    assert cli(run_main, run_args(d, "full")) == 0
+    # everything is fresh for a bare --since, stale against tomorrow
+    assert cli(run_main, run_args(d, "n1", "--since")) == 0
+    assert split_cached(merged(d, "n1"))[0] == []
+    assert cli(run_main,
+               run_args(d, "n2", "--since", "2999-01-01")) == 0
+    live, cached = split_cached(merged(d, "n2"))
+    assert live == ["tmpci/alpha", "tmpci/beta"] and cached == []
+
+
+def test_ci_gate_clean_then_regression(scope_file, tmp_path, capsys):
+    d = str(tmp_path / "results")
+    # generous gate: host timing noise on ~ns bodies must not flag, the
+    # injected regression below is ~1000x
+    ci = ["--results-dir", d, "--no-report", "--threshold", "2.0",
+          *FAST_FLAGS]
+
+    # first run measures everything, gate clean
+    assert cli(ci_main, ["--run-id", "c1", *ci]) == 0
+    live, cached = split_cached(merged(d, "c1"))
+    assert live == ["tmpci/alpha", "tmpci/beta"] and cached == []
+    records = hist.load_history(hist.history_path(d))
+    assert all(r["tag"] == "ci" for r in records)
+
+    # unchanged tree: zero measured, still exit 0
+    assert cli(ci_main, ["--run-id", "c2", *ci]) == 0
+    out = capsys.readouterr().out
+    assert "0 measured" in out and "2 cached" in out
+
+    # build a second real measurement so the drift window has depth
+    assert cli(ci_main, ["--run-id", "c3", "--full", *ci]) == 0
+
+    # inject a regression into beta only → ci re-measures it and fails
+    rewrite(scope_file, beta_line=BETA_SLOW)
+    assert cli(ci_main, ["--run-id", "c4", *ci]) == 1
+    live, cached = split_cached(merged(d, "c4"))
+    assert live == ["tmpci/beta"] and cached == ["tmpci/alpha"]
+    records = hist.load_history(hist.history_path(d))
+    beta = [r for r in records if r["run_id"] == "c4"
+            and r["name"] == "tmpci/beta"]
+    assert beta and not beta[0].get("cached")
+
+
+def test_ci_usage_errors(scope_file, tmp_path):
+    assert cli(ci_main, ["--results-dir", ""]) == 2
+    assert cli(ci_main, ["--results-dir", str(tmp_path),
+                         "--param", "nonsense"]) == 2
+    assert cli(ci_main, ["--results-dir", str(tmp_path),
+                         "--benchmark_filter", "no/such/bench"]) == 2

@@ -195,3 +195,46 @@ def test_dashboard_logic_without_http(results):
     assert [r["run_id"] for r in runs] == ["r1", "r2"]
     html = dash.index_html()
     assert "Instance trends" in html and "<svg" in html
+
+
+def test_api_coverage_lazy_cached_and_refreshable(server):
+    """Coverage is computed once (registry enumeration is heavy), cached
+    across requests, and ?refresh=1 invalidates.  The registry walk is
+    stubbed — HTTP plumbing is under test here, not the scopes."""
+    dash = server.dashboard
+    calls = []
+
+    def fake_coverage():
+        if dash._coverage is None:
+            calls.append(1)
+            dash._coverage = {
+                "sysinfo": "m1",
+                "scopes": {"s": {"fresh": 1, "stale": 1, "never": 0}},
+                "totals": {"fresh": 1, "stale": 1, "never": 0},
+                "instances": 2, "pending": ["s/b"]}
+        return dash._coverage
+
+    dash.coverage = fake_coverage
+    first = get(server, "/api/coverage")
+    assert first["totals"] == {"fresh": 1, "stale": 1, "never": 0}
+    assert get(server, "/api/coverage") == first
+    assert len(calls) == 1                        # cached
+    get(server, "/api/coverage?refresh=1")
+    assert len(calls) == 2                        # invalidated
+
+    # once computed, the index page renders the staleness panel
+    html = get(server, "/", expect_json=False)
+    assert "Staleness" in html and "/api/coverage" in html
+
+
+def test_api_coverage_degrades_to_error(server, monkeypatch):
+    """A box that can't enumerate the registry still serves trends; the
+    coverage endpoint degrades to an error payload, not a 500."""
+    import repro.core.fingerprint as fing
+
+    def boom(*a, **k):
+        raise RuntimeError("no jax here")
+    monkeypatch.setattr(fing, "registered_benches", boom)
+    payload = get(server, "/api/coverage")
+    assert "error" in payload and "no jax here" in payload["error"]
+    assert get_code(server, "/") == 200           # index still serves

@@ -49,12 +49,14 @@ def test_link_checker_catches_dead_links(tmp_path):
 
 def _parsers():
     from repro.core.baseline import build_compare_parser
+    from repro.core.ci import build_ci_parser
     from repro.core.lint import build_lint_parser
     from repro.core.main import build_plan_parser, build_run_parser
     from repro.core.tune import build_tune_parser
     from repro.scopeplot.report import build_report_parser
     from repro.store.cli import build_query_parser, build_store_parser
     return {"run": build_run_parser(), "plan": build_plan_parser(),
+            "ci": build_ci_parser(),
             "tune": build_tune_parser(),
             "lint": build_lint_parser(),
             "compare": build_compare_parser(),
@@ -65,8 +67,8 @@ def _parsers():
 
 def test_examples_cover_every_subcommand():
     from repro.core.cli_examples import EXAMPLES
-    assert set(EXAMPLES) == {"run", "plan", "tune", "lint", "compare",
-                            "report", "query", "store"}
+    assert set(EXAMPLES) == {"run", "plan", "ci", "tune", "lint",
+                             "compare", "report", "query", "store"}
     assert all(EXAMPLES[k] for k in EXAMPLES)
 
 
@@ -102,8 +104,8 @@ def test_top_level_help(capsys):
     from repro.core.main import main
     assert main(["--help"]) == 0
     out = capsys.readouterr().out
-    for cmd in ("run", "plan", "tune", "lint", "compare", "report",
-                "query", "store"):
+    for cmd in ("run", "plan", "ci", "tune", "lint", "compare",
+                "report", "query", "store"):
         assert cmd in out
     assert "examples:" in out
 

@@ -1,0 +1,227 @@
+"""repro.core.fingerprint: instance fingerprints are deterministic
+across processes, change when — and only when — a digest input changes,
+and drive delta planning (`--since`) + freshness coverage correctly."""
+import json
+import os
+import subprocess
+import sys
+import types
+
+from repro.core import fingerprint as fp
+from repro.core.flags import FlagRegistry
+from repro.core.hooks import HookChain
+from repro.core.registry import BenchmarkRegistry
+from repro.core.scope import ScopeManager
+
+EXAMPLE = ["repro.scopes.example_scope"]
+
+
+def make_mgr(modules):
+    mgr = ScopeManager(registry=BenchmarkRegistry(), flags=FlagRegistry(),
+                       hooks=HookChain())
+    mgr.load(modules)
+    mgr.register_all()
+    return mgr
+
+
+def example_benches():
+    return make_mgr(EXAMPLE).registry.all()
+
+
+def rec(name, fingerprint, *, run_id="r1", ts="2026-08-01T00:00:00",
+        sysinfo="m1", mean=1.0, **extra):
+    out = {"run_id": run_id, "ts": ts, "name": name, "mean_s": mean,
+           "stddev_s": 0.0, "n": 1, "errors": 0, "sysinfo": sysinfo,
+           "verdict": "new", "fingerprint": fingerprint}
+    out.update(extra)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_fingerprints_stable_within_process():
+    a = fp.registry_fingerprints(example_benches())
+    b = fp.registry_fingerprints(example_benches())
+    assert a and a == b
+    assert all(len(v) == fp.DIGEST_LEN for v in a.values())
+
+
+def test_fingerprints_stable_across_processes(monkeypatch):
+    """The acceptance bar: a fresh interpreter computes byte-identical
+    digests (content-based inputs only — no paths, pids, or times)."""
+    parent = fp.registry_fingerprints(example_benches())
+    code = (
+        "import json\n"
+        "from repro.core.fingerprint import registry_fingerprints\n"
+        "from tests.test_fingerprint import example_benches\n"
+        "print(json.dumps(registry_fingerprints(example_benches())))\n"
+    )
+    env = dict(os.environ)   # children must inherit the env (jax probe)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(repo, "src"), repo,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    assert json.loads(out.stdout) == parent
+
+
+def test_family_inputs_are_labeled_and_content_based():
+    bench = {b.name: b for b in example_benches()}["example/axpy"]
+    ins = fp.family_inputs(bench)
+    assert set(ins) == {"version", "body", "fixture", "sync", "meters",
+                        "tunable", "kernels", "tuned", "jax", "jaxlib"}
+    assert "def axpy" in ins["body"]
+    assert "def axpy_setup" in ins["fixture"]
+    # nothing environment-shaped leaks into the digest inputs
+    blob = json.dumps(ins)
+    assert os.sep + "repo" not in blob and "/root/" not in blob
+
+
+# ---------------------------------------------------------------------------
+# sensitivity: each input moves the digest; nothing else does
+# ---------------------------------------------------------------------------
+
+def axpy():
+    return {b.name: b for b in example_benches()}["example/axpy"]
+
+
+def test_digest_changes_on_body_edit():
+    a, b = axpy(), axpy()
+    b.source = b.source + "  # edited\n"
+    assert fp.family_digest(a) != fp.family_digest(b)
+
+
+def test_digest_changes_on_fixture_edit():
+    a, b = axpy(), axpy()
+    b.fixture_source = b.fixture_source + "  # edited\n"
+    assert fp.family_digest(a) != fp.family_digest(b)
+
+
+def test_digest_changes_on_jax_version(monkeypatch):
+    a = fp.family_digest(axpy())
+    real = fp._stack_versions()
+    monkeypatch.setattr(fp, "_stack_versions",
+                        lambda: dict(real, jax="99.0.0"))
+    assert fp.family_digest(axpy()) != a
+
+
+def test_digest_changes_on_kernel_source(monkeypatch):
+    """A family importing a Pallas kernel re-fingerprints when any
+    module in the kernel's transitive closure changes."""
+    bench = axpy()
+    bench.source = ("def body(state):\n"
+                    "    from repro.kernels.matmul import matmul\n")
+    base = fp.family_digest(bench)
+    real = fp._module_source
+    monkeypatch.setattr(
+        fp, "_module_source",
+        lambda m: (real(m) or "") + "# patched\n"
+        if m == "repro.kernels.matmul.kernel" else real(m))
+    assert fp.family_digest(bench) != base
+
+
+def test_digest_changes_on_tuned_artifact(monkeypatch, tmp_path):
+    mgr = make_mgr(["repro.scopes.mxu_scope"])
+    bench = {b.name: b for b in mgr.registry.all()}["mxu/matmul"]
+    assert bench.tunable is not None
+    base = fp.family_inputs(bench)
+    (tmp_path / "matmul").mkdir()
+    (tmp_path / "matmul" / "tuned.json").write_text(json.dumps(
+        {"config": {"bm": 8, "bn": 8, "bk": 8}}))
+    monkeypatch.setenv("REPRO_TUNED_DIR", str(tmp_path))
+    from repro.kernels import tuning
+    tuning.invalidate_cache()
+    try:
+        new = fp.family_inputs(bench)
+    finally:
+        monkeypatch.delenv("REPRO_TUNED_DIR")
+        tuning.invalidate_cache()
+    assert new["tuned"] != base["tuned"]
+    assert {k for k in base if base[k] != new[k]} == {"tuned"}
+
+
+def test_params_split_families_share_family_digest():
+    bench = axpy()
+    fam = fp.family_digest(bench)
+    names = dict(bench.instances())
+    fps = {name: fp.instance_fingerprint(bench, params, fam)
+           for name, params in bench.instances()}
+    assert len(set(fps.values())) == len(names)   # one per point
+    # same params → same fingerprint, independent of family iteration
+    again = {name: fp.instance_fingerprint(bench, params)
+             for name, params in bench.instances()}
+    assert fps == again
+
+
+def test_kernel_dependencies_transitive_closure():
+    src = "from repro.kernels.matmul import matmul as pallas_matmul\n"
+    deps = fp.kernel_dependencies([src])
+    assert "repro.kernels.matmul" in deps
+    assert "repro.kernels.matmul.kernel" in deps    # via ops/__init__
+    assert "repro.kernels.tuning" in deps
+    assert all(d.startswith("repro.kernels") for d in deps)
+    # indented source (fixture bodies) parses the same
+    assert fp.kernel_dependencies(["    " + src]) == deps
+    assert fp.kernel_dependencies(["import numpy as np\n"]) == []
+
+
+# ---------------------------------------------------------------------------
+# freshness classification + delta split
+# ---------------------------------------------------------------------------
+
+def test_classify_states():
+    assert fp.classify("aa", None) == fp.NEVER
+    assert fp.classify("aa", rec("x", "bb")) == fp.STALE
+    assert fp.classify("aa", rec("x", "aa")) == fp.FRESH
+    assert fp.classify("aa", rec("x", "aa", mean=None)) == fp.STALE
+    assert fp.classify("aa", rec("x", "aa", errors=1)) == fp.STALE
+    assert fp.classify("aa", rec("x", "aa", ts="2026-07-01T00:00:00"),
+                       since="2026-08-01") == fp.STALE
+    assert fp.classify("aa", rec("x", "aa", ts="2026-08-02T00:00:00"),
+                       since="2026-08-01") == fp.FRESH
+
+
+def test_latest_measurements_skips_cached_tune_and_other_machines():
+    records = [
+        rec("s/a", "f1", run_id="r1"),
+        rec("s/a", "f2", run_id="r2", cached=True),     # replay: no vouch
+        rec("s/b", "f3", run_id="r2", tag="tune"),      # trial: no vouch
+        rec("s/c", "f4", run_id="r2", sysinfo="m2"),    # other machine
+    ]
+    latest = fp.latest_measurements(records, sysinfo="m1")
+    assert set(latest) == {"s/a"}
+    assert latest["s/a"]["fingerprint"] == "f1"
+
+
+def test_delta_split_prunes_only_fresh():
+    items = [types.SimpleNamespace(instance_id=f"i{i}", name=n)
+             for i, n in enumerate(["s/a", "s/b", "s/c"])]
+    fps = {"s/a": "fa", "s/b": "fb", "s/c": "fc"}
+    records = [rec("s/a", "fa"),            # fresh → cached
+               rec("s/b", "old")]           # stale → runs
+    pending, cached = fp.delta_split(items, fps, records, "m1")
+    assert [i.name for i in pending] == ["s/b", "s/c"]
+    assert set(cached) == {"i0"}
+    assert cached["i0"]["fingerprint"] == "fa"
+
+
+def test_coverage_counts_per_scope():
+    benches = example_benches()
+    cov = fp.coverage(benches, [])
+    n = cov["instances"]
+    assert n > 0 and cov["totals"] == {"fresh": 0, "stale": 0, "never": n}
+    # forge fresh records for every instance on machine m1
+    fps = fp.registry_fingerprints(benches)
+    records = [rec(name, digest) for name, digest in fps.items()]
+    cov = fp.coverage(benches, records, sysinfo="m1")
+    assert cov["totals"] == {"fresh": n, "stale": 0, "never": 0}
+    assert cov["pending"] == []
+    # one stale fingerprint shows up as pending again
+    records[0]["fingerprint"] = "stale"
+    cov = fp.coverage(benches, records, sysinfo="m1")
+    assert cov["totals"]["stale"] == 1
+    assert cov["pending"] == [records[0]["name"]]

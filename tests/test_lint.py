@@ -934,3 +934,59 @@ def test_scope109_real_tree_is_clean(no_body_runs):
     report = lint(r, rules=["SCOPE109"])
     assert report.findings == []
     assert report.rules_run == ["SCOPE109"]
+
+
+# ---------------------------------------------------------------------------
+# SCOPE110 — body reads module-level mutable state (fingerprint-invisible)
+# ---------------------------------------------------------------------------
+
+_TABLE = {"scale": 2.0}          # the hazard: mutable, module-level
+_FACTORS = [1, 2, 4]
+_FROZEN = (1, 2, 4)              # immutable → clean
+
+
+def test_scope110_triggers_on_module_dict_read(no_body_runs):
+    r = reg()
+
+    def body(state):
+        while state.keep_running():
+            state.deliver(_TABLE["scale"])
+        state.set_items_processed(1)
+    register_benchmark("tabled", body, scope="s", registry=r)
+    found = [f for f in lint(r, rules=["SCOPE110"]).findings
+             if f.rule == "SCOPE110"]
+    assert len(found) == 1
+    assert found[0].severity == "warning"
+    assert "_TABLE" in found[0].message
+    assert "dict" in found[0].message
+
+
+def test_scope110_triggers_on_global_statement_and_list(no_body_runs):
+    r = reg()
+
+    def body(state):
+        global _TABLE
+        while state.keep_running():
+            state.deliver(_FACTORS[0])
+        state.set_items_processed(1)
+    register_benchmark("globaled", body, scope="s", registry=r)
+    msgs = [f.message for f in lint(r, rules=["SCOPE110"]).findings
+            if f.rule == "SCOPE110"]
+    assert len(msgs) == 2
+    assert any("global _TABLE" in m for m in msgs)
+    assert any("_FACTORS" in m and "list" in m for m in msgs)
+
+
+def test_scope110_clean_on_locals_constants_and_modules(no_body_runs):
+    r = reg()
+
+    def body(state):
+        table = {"scale": 2.0}              # local dict: fine
+        acc = jnp.zeros(())                 # module read: fine
+        while state.keep_running():
+            state.deliver(acc + table["scale"] * _FROZEN[0])
+        state.set_items_processed(1)
+    _quietly(register_benchmark("selfcontained", body, scope="s",
+                                registry=r))
+    assert [f for f in lint(r, rules=["SCOPE110"]).findings
+            if f.rule == "SCOPE110"] == []

@@ -462,3 +462,118 @@ def test_query_store_sql_injection_safe(results):
     finally:
         con.close()
     assert n == len(hist.scan_history(path))
+
+
+# ---------------------------------------------------------------------------
+# v2 schema: fingerprints + cached flags (continuous benchmarking)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def fp_results(results):
+    """One extra run whose records carry fingerprints, one replayed."""
+    doc = make_doc("f1", {
+        "mxu/matmul/dtype:bf16/n:256": 1.01,
+        "example/saxpy/1024": 0.55,
+    }, date="2026-08-05T10:00:00")
+    doc["context"]["fingerprints"] = {
+        "mxu/matmul/dtype:bf16/n:256": "aaaa111122223333",
+        "example/saxpy/1024": "bbbb111122223333",
+    }
+    doc["benchmarks"][1]["cached"] = True         # saxpy is a replay
+    hist.append_run(results, doc)
+    return results
+
+
+def test_fingerprints_survive_append_and_index(fp_results):
+    path = hpath(fp_results)
+    recs = [r for r in hist.scan_history(path) if r["run_id"] == "f1"]
+    by = {r["name"]: r for r in recs}
+    assert by["mxu/matmul/dtype:bf16/n:256"]["fingerprint"] == \
+        "aaaa111122223333"
+    assert "cached" not in by["mxu/matmul/dtype:bf16/n:256"]
+    assert by["example/saxpy/1024"]["cached"] is True
+    store_index.refresh(path)
+    con = sqlite3.connect(store_index.db_path(path))
+    rows = dict(con.execute(
+        "SELECT name, fingerprint FROM records WHERE run_id='f1'"))
+    cached = dict(con.execute(
+        "SELECT name, cached FROM records WHERE run_id='f1'"))
+    con.close()
+    assert rows["example/saxpy/1024"] == "bbbb111122223333"
+    assert cached == {"mxu/matmul/dtype:bf16/n:256": 0,
+                      "example/saxpy/1024": 1}
+
+
+@pytest.mark.parametrize("flt", [
+    QueryFilter(fingerprint="aaaa111122223333"),
+    QueryFilter(fingerprint=""),
+    QueryFilter(fingerprint="nosuch"),
+], ids=lambda f: f.describe() or "all")
+def test_fingerprint_filter_store_scan_byte_equivalent(fp_results, flt):
+    path = hpath(fp_results)
+    store_index.refresh(path)
+    via_store = list(store_query._store_rows(path, flt))
+    via_scan = list(scan_records(path, flt))
+    assert via_store == via_scan
+    if flt.fingerprint == "aaaa111122223333":
+        assert len(via_scan) == 1
+
+
+def test_query_cli_fingerprint_flag(fp_results, capsys):
+    assert query_main(["--fingerprint", "bbbb111122223333",
+                       "--results-dir", fp_results,
+                       "--format", "json"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert [r["name"] for r in out] == ["example/saxpy/1024"]
+
+
+def test_store_status_counts_fingerprints(fp_results, capsys):
+    assert store_main(["index", "--results-dir", fp_results]) == 0
+    capsys.readouterr()
+    assert store_main(["status", "--results-dir", fp_results,
+                       "--format", "json"]) == 0
+    status = json.loads(capsys.readouterr().out)
+    assert status["fingerprints"] == 2
+
+
+def test_cached_records_excluded_from_drift_pool(fp_results):
+    """A replayed mean must not tighten the pooled window stddev."""
+    records = hist.load_history(hpath(fp_results))
+    pooled = hist.window_document(records, window=10)
+    names = {b["name"]: b for b in pooled["benchmarks"]}
+    # saxpy f1 record was cached: only the 3 measured runs pool
+    assert names["example/saxpy/1024"]["repetitions"] == 3
+
+
+def test_v1_database_rebuilds_to_v2(fp_results):
+    path = hpath(fp_results)
+    store_index.refresh(path)
+    db = store_index.db_path(path)
+    con = sqlite3.connect(db)
+    con.execute("UPDATE meta SET value='1' WHERE key='schema_version'")
+    con.commit()
+    con.close()
+    store_index.refresh(path)                    # migration-by-rebuild
+    con = sqlite3.connect(db)
+    version = con.execute(
+        "SELECT value FROM meta WHERE key='schema_version'").fetchone()[0]
+    n = con.execute("SELECT COUNT(*) FROM records "
+                    "WHERE fingerprint != ''").fetchone()[0]
+    con.close()
+    assert version == str(store_index.SCHEMA_VERSION)
+    assert n == 2
+
+
+def test_store_status_coverage_table(fp_results, capsys, monkeypatch):
+    from repro.store import cli as store_cli
+    monkeypatch.setattr(
+        store_cli, "_coverage_info",
+        lambda history: {"sysinfo": "m1",
+                         "scopes": {"mxu": {"fresh": 1, "stale": 2,
+                                            "never": 0}},
+                         "totals": {"fresh": 1, "stale": 2, "never": 0},
+                         "instances": 3, "pending": ["mxu/x"]})
+    assert store_main(["status", "--results-dir", fp_results,
+                       "--coverage"]) == 0
+    out = capsys.readouterr().out
+    assert "mxu" in out and "fresh" in out
